@@ -1,0 +1,51 @@
+"""BEYOND-PAPER extension bench: heterogeneous-worker piece allocation
+(the paper's §VI future direction) — speed-aware vs uniform assignment
+on a VGG16 conv layer with a mixed fleet."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.hetero import allocate_pieces, simulate_hetero, worker_speed
+from repro.core.splitting import ConvSpec
+
+from .common import Csv, PAPER_PARAMS
+
+
+def run(csv: Csv, trials=200):
+    """Two regimes: (a) TIGHT redundancy (n_pieces = k + 2 with 2 slow
+    workers): uniform assignment must consume slow-worker pieces, so the
+    speed-aware planner wins; (b) AMPLE redundancy (n_pieces = k + 6): the
+    MDS code alone already discards the stragglers and concentrating
+    pieces on fast workers only serialises them — uniform is optimal.
+    The planner should therefore fall back to uniform when r covers the
+    straggler count (recorded finding)."""
+    spec = ConvSpec(c_in=128, c_out=256, h_in=58, w_in=58, kernel=3)
+    fast = PAPER_PARAMS
+    for regime, fleet_fast, k, n_pieces in (
+            ("scarce-workers", 2, 6, 8),   # 2 slow + 2 fast: every worker
+            #                                must contribute >1 piece
+            ("ample-fleet", 8, 8, 14),     # 2 slow + 8 fast: r covers them
+    ):
+        for slow_factor in (2.0, 4.0):
+            slow = dataclasses.replace(
+                fast, theta_cmp=fast.theta_cmp * slow_factor,
+                mu_cmp=fast.mu_cmp / slow_factor)
+            fleet = [slow, slow] + [fast] * fleet_fast
+            smart = allocate_pieces([worker_speed(p) for p in fleet],
+                                    n_pieces)
+            uniform = allocate_pieces([1.0] * len(fleet), n_pieces)
+            r1, r2 = np.random.default_rng(0), np.random.default_rng(0)
+            t_s = np.mean([simulate_hetero(spec, k, smart, fleet, r1)
+                           for _ in range(trials)])
+            t_u = np.mean([simulate_hetero(spec, k, uniform, fleet, r2)
+                           for _ in range(trials)])
+            csv.add(f"ext_hetero/{regime}/slow{slow_factor:.0f}x",
+                    t_s * 1e6,
+                    f"speed_aware={t_s:.4f}s;uniform={t_u:.4f}s;"
+                    f"gain={1 - t_s / t_u:.3f};alloc={smart}")
+
+
+if __name__ == "__main__":
+    run(Csv())

@@ -1,0 +1,41 @@
+"""Fig. 10 / App. E: impact of system parameters on the optimal strategy.
+
+k° as a function of (mu_cmp, theta_cmp) and (mu_tr, theta_tr), plus the
+n-scaling observation (larger n -> larger optimal k).  Checks Prop. 1's
+monotonicity empirically.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.planner import k_circ
+from repro.core.splitting import ConvSpec
+
+from .common import Csv, PAPER_PARAMS
+
+SPEC = ConvSpec(c_in=64, c_out=128, h_in=58, w_in=58, kernel=3, stride=1)
+
+
+def run(csv: Csv):
+    for n in (10, 20):
+        ks_mu = [k_circ(SPEC, n, dataclasses.replace(PAPER_PARAMS, mu_cmp=m))
+                 for m in (2e8, 2e9, 2e10)]
+        ks_th = [k_circ(SPEC, n, dataclasses.replace(
+            PAPER_PARAMS, theta_cmp=t, mu_cmp=5e8))
+            for t in (5e-11, 2e-10, 8e-10)]
+        ks_tr = [k_circ(SPEC, n, dataclasses.replace(
+            PAPER_PARAMS, mu_rec=m, mu_sen=m)) for m in (1e7, 4e7, 1.6e8)]
+        csv.add(f"fig10/n{n}/k_vs_mucmp", float(ks_mu[-1]),
+                f"ks={ks_mu};monotone_up={ks_mu == sorted(ks_mu)}")
+        csv.add(f"fig10/n{n}/k_vs_thetacmp", float(ks_th[-1]),
+                f"ks={ks_th};monotone_up={ks_th == sorted(ks_th)}")
+        csv.add(f"fig10/n{n}/k_vs_mutr", float(ks_tr[-1]),
+                f"ks={ks_tr};monotone_up={ks_tr == sorted(ks_tr)}")
+    k10 = k_circ(SPEC, 10, PAPER_PARAMS)
+    k20 = k_circ(SPEC, 20, PAPER_PARAMS)
+    csv.add("fig10/k_vs_n", float(k20), f"k(n=10)={k10};k(n=20)={k20};"
+            f"grows={k20 >= k10}")
+
+
+if __name__ == "__main__":
+    run(Csv())

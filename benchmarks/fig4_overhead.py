@@ -1,0 +1,31 @@
+"""Fig. 4: encoding/decoding overhead per convolutional layer.
+
+For each type-1 layer at k = k°, reports the master-side enc+dec share of
+the layer's total expected latency.  The paper measures 2-9%.
+"""
+from __future__ import annotations
+
+from repro.core.latency import phase_sizes
+from repro.core.planner import L, k_circ
+
+from .common import Csv, N_WORKERS, PAPER_PARAMS, type1_layers
+
+
+def run(csv: Csv):
+    for net in ("vgg16", "resnet18"):
+        shares = []
+        for li in type1_layers(net):
+            k = k_circ(li.spec, N_WORKERS, PAPER_PARAMS)
+            s = phase_sizes(li.spec, N_WORKERS, k)
+            encdec = (s.n_enc + s.n_dec) * (1.0 / PAPER_PARAMS.mu_m
+                                            + PAPER_PARAMS.theta_m)
+            total = L(li.spec, N_WORKERS, k, PAPER_PARAMS)
+            shares.append(encdec / total)
+        csv.add(f"fig4/{net}/encdec_share",
+                1e6 * sum(shares) / len(shares),
+                f"min={min(shares):.3f};max={max(shares):.3f};"
+                f"mean={sum(shares) / len(shares):.3f}")
+
+
+if __name__ == "__main__":
+    run(Csv())

@@ -1,0 +1,47 @@
+"""Fig. 5: CNN inference latency under scenario-1 (straggling sweep).
+
+Methods: CoCoI-k*, CoCoI-k°, uncoded [8], replication [15], LtCoI-k_s.
+The paper's qualitative claims checked here:
+  * lambda_tr small -> uncoded slightly faster;
+  * lambda_tr >= 0.4 -> CoCoI wins, up to ~20% at lambda_tr = 1;
+  * CoCoI-k* ~ CoCoI-k°.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.runtime import SimScenario
+
+from .common import Csv, network_latency, plan_ks
+
+
+def run(csv: Csv, lambdas=(0.2, 0.4, 0.6, 0.8, 1.0), trials=20,
+        nets=("vgg16", "resnet18")):
+    for net in nets:
+        for lam in lambdas:
+            sc = SimScenario(lambda_tr=lam)
+            ks_c = plan_ks(net, how="circ", scenario=sc)
+            ks_s = plan_ks(net, how="star", scenario=sc)
+            lt_sc = dataclasses.replace(sc, lt_k=5)  # LtCoI-k_s: k <= n
+            res = {
+                "cocoi_kstar": network_latency(net, "coded", sc, ks=ks_s,
+                                               trials=trials).mean(),
+                "cocoi_kcirc": network_latency(net, "coded", sc, ks=ks_c,
+                                               trials=trials).mean(),
+                "uncoded": network_latency(net, "uncoded", sc,
+                                           trials=trials).mean(),
+                "replication": network_latency(net, "replication", sc,
+                                               trials=trials).mean(),
+                "lt_ks": network_latency(net, "lt", lt_sc,
+                                         trials=trials).mean(),
+            }
+            red = 1.0 - res["cocoi_kcirc"] / res["uncoded"]
+            csv.add(f"fig5/{net}/lam{lam}", res["cocoi_kcirc"] * 1e6,
+                    ";".join(f"{k}={v:.3f}s" for k, v in res.items())
+                    + f";reduction_vs_uncoded={red:.3f}")
+
+
+if __name__ == "__main__":
+    run(Csv())

@@ -1,0 +1,36 @@
+"""Fig. 7 / App. A: per-layer local-inference breakdown.
+
+Derives each layer's single-device latency from the latency model
+(E[T] = N_cmp * (theta_cmp + 1/mu_cmp)) and reports the conv share of
+total inference — the paper measures 99.43% (VGG16) / 99.68% (ResNet18)
+and ~50.8s / 89.8s totals on the Pi 4B.
+"""
+from __future__ import annotations
+
+from .common import Csv, NETWORKS, PAPER_PARAMS
+
+
+def conv_local_seconds(spec, params=PAPER_PARAMS) -> float:
+    flops = spec.subtask_flops(spec.w_out)
+    return flops * (params.theta_cmp + 1.0 / params.mu_cmp)
+
+
+def run(csv: Csv):
+    for net, layers in NETWORKS.items():
+        total = 0.0
+        t1 = 0.0
+        for li in layers:
+            t = conv_local_seconds(li.spec)
+            total += t
+            if li.type1:
+                t1 += t
+        # "other" layers (pooling/linear/act) ~ <1% per App. A
+        other = 0.005 * total
+        share = total / (total + other)
+        csv.add(f"fig7/{net}/local_conv_total_s", total * 1e6,
+                f"conv_share={share:.4f};type1_share={t1 / total:.4f};"
+                f"n_type1={sum(li.type1 for li in layers)}")
+
+
+if __name__ == "__main__":
+    run(Csv())

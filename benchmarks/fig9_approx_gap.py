@@ -1,0 +1,47 @@
+"""Fig. 9 / App. D: the approximation gap of problem (17) vs problem (13).
+
+(a) |k* - k°| over a (mu_tr, mu_cmp) grid; (b) objective curves at one
+setting.  The paper: gap ~0-1 across the yellow region, objectives nearly
+coincide.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.planner import L, expected_latency_mc, k_circ, k_star
+from repro.core.splitting import ConvSpec
+
+from .common import Csv, PAPER_PARAMS
+
+SPEC = ConvSpec(c_in=64, c_out=128, h_in=58, w_in=58, kernel=3, stride=1)
+N = 20  # the paper's Fig. 9 uses n=20
+
+
+def run(csv: Csv):
+    diffs = []
+    for mu_tr in (1e7, 4e7, 1.6e8):
+        for mu_cmp in (5e8, 2e9, 8e9):
+            p = dataclasses.replace(PAPER_PARAMS, mu_rec=mu_tr, mu_sen=mu_tr,
+                                    mu_cmp=mu_cmp)
+            kc = k_circ(SPEC, N, p)
+            ks = k_star(SPEC, N, p, samples=4000)
+            diffs.append(abs(kc - ks))
+            csv.add(f"fig9a/mutr{mu_tr:.0e}/mucmp{mu_cmp:.0e}",
+                    float(abs(kc - ks)), f"k_circ={kc};k_star={ks}")
+    csv.add("fig9a/max_gap", float(max(diffs)),
+            f"mean_gap={np.mean(diffs):.2f}")
+    # (b) objective curves
+    p = PAPER_PARAMS
+    gaps = []
+    for k in range(1, N):
+        approx = L(SPEC, N, k, p)
+        actual = expected_latency_mc(SPEC, N, k, p, samples=6000)
+        gaps.append(abs(approx - actual) / actual)
+    csv.add("fig9b/objective_relgap", 1e6 * float(np.mean(gaps)),
+            f"mean={np.mean(gaps):.4f};max={max(gaps):.4f}")
+
+
+if __name__ == "__main__":
+    run(Csv())

@@ -1,0 +1,79 @@
+"""§Perf hillclimb driver: run named variants of a (arch x shape) pair and
+log roofline metrics per iteration (hypothesis -> change -> before/after).
+
+Usage: PYTHONPATH=src python -m benchmarks.hillclimb <pair> [--out FILE]
+Pairs: qwen3-decode | internvl-decode | zamba2-long | deepseek-train | kimi-train
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def variants_for(pair: str):
+    if pair == "qwen3-decode":
+        return "qwen3-32b", "decode_32k", [
+            ("baseline", {}),
+            ("donate-cache", {"donate_cache": True}),
+            ("donate+no-fsdp", {"donate_cache": True, "fsdp": False}),
+        ]
+    if pair == "internvl-decode":
+        return "internvl2-1b", "decode_32k", [
+            ("baseline", {}),
+            ("no-fsdp", {"fsdp": False}),
+            ("no-fsdp+donate", {"fsdp": False, "donate_cache": True}),
+        ]
+    if pair == "zamba2-long":
+        def patch(cfg):
+            # window the shared attention for long-context serving (the
+            # same sub-quadratic substitution dense archs already get)
+            return dataclasses.replace(cfg, sliding_window=8192)
+        return "zamba2-1.2b", "long_500k", [
+            ("baseline", {}),
+            ("windowed-shared-attn", {"patch": patch}),
+            ("windowed+donate", {"patch": patch, "donate_cache": True}),
+        ]
+    if pair == "deepseek-train":
+        def flash(cfg):
+            return dataclasses.replace(cfg, flash_vjp=True)
+        return "deepseek-coder-33b", "train_4k", [
+            ("baseline", {}),
+            ("flash-vjp", {"patch": flash}),
+        ]
+    if pair == "kimi-train":
+        def nofsdp_experts(cfg):
+            return cfg
+        return "kimi-k2-1t-a32b", "train_4k", [
+            ("baseline", {}),
+            ("no-fsdp", {"fsdp": False}),
+        ]
+    raise SystemExit(f"unknown pair {pair}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("pair")
+    ap.add_argument("--out", default="results_hillclimb.jsonl")
+    args = ap.parse_args(argv)
+
+    from repro.launch.dryrun import run_one
+    from repro.configs import get_config
+
+    arch, shape, variants = variants_for(args.pair)
+    for tag, kw in variants:
+        kw = dict(kw)
+        patch = kw.pop("patch", None)
+        cfg = get_config(arch)
+        if patch is not None:
+            cfg = patch(cfg)
+        rec = run_one(arch, shape, cfg_override=cfg, tag=tag, **kw)
+        rec["pair"] = args.pair
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,44 @@
+"""Kernel microbenchmarks (interpret mode on CPU — wall time is a
+correctness-path proxy, not TPU perf; roofline terms come from the
+dry-run instead)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coding import vandermonde_generator
+from repro.kernels.ops import conv2d_subtask, mds_encode, ssd_chunk
+
+from .common import Csv, timed
+
+
+def run(csv: Csv):
+    # MDS encode: paper-shape (n=10, k=6) over a VGG conv4 partition
+    G = jnp.asarray(vandermonde_generator(10, 6), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 512 * 30 * 8), jnp.float32)
+    _, us = timed(lambda: jax.block_until_ready(mds_encode(G, x, interpret=True)))
+    csv.add("kernels/mds_encode_10x6", us, f"elems={x.size}")
+
+    # conv2d: one worker subtask of VGG16 conv3_1 split k=6
+    xw = jax.random.normal(jax.random.PRNGKey(1), (128, 58, 12), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(2), (256, 128, 3, 3), jnp.float32) * 0.03
+    _, us = timed(lambda: jax.block_until_ready(
+        conv2d_subtask(xw, w, 1, interpret=True)))
+    csv.add("kernels/conv2d_subtask", us, "c128->256 h58 w12 k3")
+
+    # ssd chunk: mamba2-2.7b-like tile (reduced H for CPU interpret)
+    B, L, H, P, N = 1, 64, 8, 64, 128
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    args = (jax.random.normal(ks[0], (B, L, H, P), jnp.float32),
+            jax.nn.softplus(jax.random.normal(ks[1], (B, L, H))),
+            -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3),
+            jax.random.normal(ks[3], (B, L, N), jnp.float32),
+            jax.random.normal(ks[4], (B, L, N), jnp.float32),
+            jnp.zeros((B, H, P, N), jnp.float32))
+    _, us = timed(lambda: jax.block_until_ready(
+        ssd_chunk(*args, interpret=True)[0]))
+    csv.add("kernels/ssd_chunk", us, f"L{L} H{H} P{P} N{N}")
+
+
+if __name__ == "__main__":
+    run(Csv())

@@ -1,0 +1,59 @@
+"""Roofline report: reads the dry-run JSONL records and prints the
+per-(arch x shape x mesh) three-term roofline table (§Roofline), plus the
+hillclimb pair selection (worst roofline fraction / most collective-bound /
+most paper-representative)."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import Csv
+
+DEFAULT_PATHS = ("results_dryrun_single.jsonl", "results_dryrun_multi.jsonl")
+
+
+def load(paths=DEFAULT_PATHS):
+    rows = []
+    for p in paths:
+        if os.path.exists(p):
+            with open(p) as f:
+                for line in f:
+                    if line.strip():
+                        rows.append(json.loads(line))
+    # keep the latest record per (arch, shape, mesh)
+    seen = {}
+    for r in rows:
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(seen.values())
+
+
+def run(csv: Csv, paths=DEFAULT_PATHS):
+    rows = load(paths)
+    if not rows:
+        csv.add("roofline/missing", 0.0,
+                "run python -m repro.launch.dryrun --all --out "
+                "results_dryrun_single.jsonl first")
+        return
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        dom = max(("t_compute_s", "t_memory_s", "t_collective_s"),
+                  key=lambda k: r[k])
+        csv.add(
+            f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}",
+            r[dom] * 1e6,
+            f"compute={r['t_compute_s']:.4g}s;memory={r['t_memory_s']:.4g}s;"
+            f"collective={r['t_collective_s']:.4g}s;"
+            f"bottleneck={r['bottleneck']};useful={r['useful_ratio']:.3f};"
+            f"mem_gb={r['per_device_mem_gb']:.2f}")
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    if single:
+        worst = min(single, key=lambda r: min(r["useful_ratio"], 1.0))
+        coll = max(single, key=lambda r: r["t_collective_s"]
+                   / max(r["t_compute_s"] + r["t_memory_s"], 1e-12))
+        csv.add("roofline/hillclimb/worst_useful", worst["useful_ratio"],
+                f"{worst['arch']}x{worst['shape']}")
+        csv.add("roofline/hillclimb/most_collective",
+                coll["t_collective_s"] * 1e6, f"{coll['arch']}x{coll['shape']}")
+
+
+if __name__ == "__main__":
+    run(Csv())

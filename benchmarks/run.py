@@ -1,0 +1,47 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+
+from .common import Csv
+
+
+def main() -> None:
+    from . import (
+        ext_hetero,
+        fig4_overhead,
+        fig5_scenario1,
+        fig6_scenario23,
+        fig7_layer_breakdown,
+        fig9_approx_gap,
+        fig10_param_impact,
+        kernels_micro,
+        roofline,
+        table1_k_approx,
+    )
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    csv = Csv()
+    benches = [
+        ("fig7", fig7_layer_breakdown.run),
+        ("fig4", fig4_overhead.run),
+        ("table1", table1_k_approx.run),
+        ("fig5", fig5_scenario1.run),
+        ("fig6", fig6_scenario23.run),
+        ("fig9", fig9_approx_gap.run),
+        ("fig10", fig10_param_impact.run),
+        ("ext_hetero", ext_hetero.run),
+        ("kernels", kernels_micro.run),
+        ("roofline", roofline.run),
+    ]
+    for name, fn in benches:
+        if only and only != name:
+            continue
+        t0 = time.time()
+        fn(csv)
+        print(f"# [{name}] done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Table I: statistics of k* vs k° per layer under scenario-1.
+
+max |k*-k°|, mean |k*-k°| and the latency penalty of using k° instead of
+k*, across the type-1 layers of each CNN, for a grid of lambda_tr.
+The paper reports max diff <= 1, mean ~0.3-0.5, latency diff <= 1.3s.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.runtime import SimScenario, simulate_layer
+
+from .common import Csv, N_WORKERS, PAPER_PARAMS, plan_ks, type1_layers
+
+
+def run(csv: Csv, lambdas=(0.2, 0.6, 1.0), trials=40):
+    for net in ("vgg16", "resnet18"):
+        layers = type1_layers(net)
+        for lam in lambdas:
+            sc = SimScenario(lambda_tr=lam)
+            ks_star = plan_ks(net, how="star", scenario=sc, samples=12000)
+            ks_circ = plan_ks(net, how="circ", scenario=sc)
+            diffs = [abs(a - b) for a, b in zip(ks_star, ks_circ)]
+            # latency penalty of k° vs k*
+            rng = np.random.default_rng(0)
+            dt = 0.0
+            for li, kst, kc in zip(layers, ks_star, ks_circ):
+                t_star = np.mean([simulate_layer(li.spec, N_WORKERS,
+                                                 PAPER_PARAMS, "coded", kst,
+                                                 sc, rng)
+                                  for _ in range(trials)])
+                t_circ = np.mean([simulate_layer(li.spec, N_WORKERS,
+                                                 PAPER_PARAMS, "coded", kc,
+                                                 sc, rng)
+                                  for _ in range(trials)])
+                dt += t_circ - t_star
+            csv.add(f"table1/{net}/lam{lam}", dt * 1e6,
+                    f"max_diff={max(diffs)};mean_diff={np.mean(diffs):.2f};"
+                    f"latency_gap_s={dt:.3f}")
+
+
+if __name__ == "__main__":
+    run(Csv())

@@ -1,0 +1,31 @@
+"""End-to-end driver (the paper's kind is INFERENCE): serve a small model
+with batched requests, both uncoded and in CoCoI coded mode, and compare
+outputs + throughput.
+
+Run: PYTHONPATH=src python examples/serve_batched.py
+"""
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.serving import Engine, Request
+
+cfg = smoke_config("gemma-2b")
+rng = np.random.default_rng(0)
+reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 24, dtype=np.int32),
+                max_new=12) for i in range(6)]
+
+plain = Engine(cfg, seed=0)
+coded = Engine(cfg, seed=0, coded=(6, 4))  # tolerate 2 stragglers per GEMM
+
+out_plain = plain.generate(reqs)
+out_coded = coded.generate(reqs)
+
+match = all((a.tokens == b.tokens).all()
+            for a, b in zip(out_plain, out_coded))
+print(f"served {len(reqs)} requests (prompt 24, +12 tokens each)")
+print(f"coded-mode generations identical to uncoded: {match}")
+tot = sum(len(c.tokens) for c in out_plain)
+print(f"uncoded wall: {out_plain[0].latency_s:.2f}s/batch; "
+      f"coded wall: {out_coded[0].latency_s:.2f}s/batch "
+      f"(CPU reference timing; straggler wins appear on the simulated "
+      f"cluster, see examples/coded_cnn_inference.py)")

@@ -1,0 +1,58 @@
+"""Minimal pytree checkpointing (npz + msgpack manifest).
+
+Stores arbitrary nested dict/list/NamedTuple pytrees of jax/np arrays.
+Layout: <dir>/step_<n>/arrays.npz + manifest.msgpack (treedef as path
+strings + dtypes).  Good enough for the training example; a production
+deployment would swap in Orbax behind the same interface.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import msgpack
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+
+def _flatten(tree):
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves_with_path:
+        key = "/".join(str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(d, "arrays.npz"), **flat)
+    manifest = {k: {"dtype": str(v.dtype), "shape": list(v.shape)} for k, v in flat.items()}
+    with open(os.path.join(d, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    return d
+
+
+def load_checkpoint(directory: str, step: int, like):
+    """Load into the structure of ``like`` (same treedef)."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path, leaf in leaves_with_path:
+        key = "/".join(str(p) for p in path)
+        arr = data[key]
+        new_leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for name in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", name))]
+    return max(steps) if steps else None

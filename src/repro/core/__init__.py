@@ -1,0 +1,43 @@
+"""CoCoI core: coded distributed inference (paper §II-IV).
+
+Public API:
+    coding      — MDS / replication / LT codes
+    splitting   — output-driven width/token splits with halo (eqs. 1-2)
+    coded_conv  — coded distributed conv2d
+    coded_linear— coded distributed GEMM (transformer adaptation)
+    latency     — shift-exponential latency model (eqs. 7-12)
+    planner     — optimal splitting k*, k° (eq. 16, problem 13/17)
+    runtime     — master/worker straggler & failure simulation (§V)
+"""
+from .coding import MDSCode, ReplicationCode, LTCode
+from .splitting import ConvSpec, SplitPlan, plan_width_split, plan_token_split
+from .coded_conv import conv2d, coded_conv2d, coded_conv2d_sharded
+from .coded_linear import coded_matmul, coded_matmul_sharded
+from .latency import ShiftExp, SystemParams, phase_sizes, harmonic
+from .planner import (
+    L,
+    L_continuous,
+    k_circ,
+    k_circ_remainder_aware,
+    k_star,
+    expected_latency_mc,
+    uncoded_latency,
+    uncoded_latency_mc,
+    replication_latency_mc,
+    straggling_index_R,
+    plan_layer,
+)
+from .runtime import SimScenario, simulate_layer, simulate_network
+
+__all__ = [
+    "MDSCode", "ReplicationCode", "LTCode",
+    "ConvSpec", "SplitPlan", "plan_width_split", "plan_token_split",
+    "conv2d", "coded_conv2d", "coded_conv2d_sharded",
+    "coded_matmul", "coded_matmul_sharded",
+    "ShiftExp", "SystemParams", "phase_sizes", "harmonic",
+    "L", "L_continuous", "k_circ", "k_circ_remainder_aware", "k_star",
+    "expected_latency_mc",
+    "uncoded_latency", "uncoded_latency_mc", "replication_latency_mc",
+    "straggling_index_R", "plan_layer",
+    "SimScenario", "simulate_layer", "simulate_network",
+]

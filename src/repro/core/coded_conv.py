@@ -1,0 +1,148 @@
+"""Coded distributed 2D convolution (paper §II-B, Fig. 2).
+
+Pipeline for one type-1 layer:
+
+    split (eqs. 1-2)  ->  MDS encode (eq. 3)  ->  n parallel conv subtasks
+    ->  any-k decode (eq. 4)  ->  width-concat (+ master remainder)
+
+Convolution is linear in its input, so f(G x) = G f(x) row-wise and the
+decode recovers the *exact* uncoded output (up to f32 roundoff of the
+Vandermonde solve) — inference quality is unchanged (§II-B.4).
+
+Two execution modes:
+
+* ``coded_conv2d``            — single-host functional form (vmap over the n
+                                subtasks); used by tests / the simulator.
+* ``coded_conv2d_sharded``    — shard_map over a mesh "worker" axis: each
+                                device holds one coded partition; this is the
+                                TPU-pod adaptation (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .coding import MDSCode
+from .splitting import ConvSpec, SplitPlan, plan_width_split
+
+__all__ = [
+    "conv2d",
+    "split_input",
+    "coded_conv2d",
+    "coded_conv2d_sharded",
+]
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Plain VALID conv (input is pre-padded, as in the paper). NCHW/OIHW."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def split_input(x: jax.Array, plan: SplitPlan) -> jax.Array:
+    """Stack the k overlapping input partitions: (B,C,H,W_I) -> (k,B,C,H,W_I^p)."""
+    return jnp.stack([x[..., p.a_i : p.b_i] for p in plan.parts])
+
+
+def _encode_partitions(code: MDSCode, parts: jax.Array) -> jax.Array:
+    """(k, B,C,H,Wp) -> (n, B,C,H,Wp) via flatten -> G @ . -> unflatten (eq. 3)."""
+    k = parts.shape[0]
+    flat = parts.reshape(k, -1)
+    coded = code.encode(flat)
+    return coded.reshape((code.n,) + parts.shape[1:])
+
+
+def coded_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    code: MDSCode,
+    spec: ConvSpec,
+    subset: Sequence[int],
+    plan: SplitPlan | None = None,
+) -> jax.Array:
+    """Full coded pipeline; returns the exact conv output f(x).
+
+    ``subset`` is the index set S of the k fastest workers (decoding uses
+    only their outputs — the other n-k are stragglers whose results are
+    discarded, which we emulate by simply not consuming them).
+    """
+    if plan is None:
+        plan = plan_width_split(spec, code.k)
+    parts = split_input(x, plan)  # (k, B, C, H, W_I^p)
+    coded_in = _encode_partitions(code, parts)  # (n, ...)
+
+    # Execution phase: each worker i computes f(X~_i) with the same weights.
+    coded_out = jax.vmap(lambda xi: conv2d(xi, w, spec.stride))(coded_in)
+
+    # Decoding phase: any k outputs suffice (eq. 4).
+    sel = coded_out[jnp.asarray(list(subset))]
+    flat = sel.reshape(code.k, -1)
+    decoded = code.decode_from(list(subset), flat)
+    y_parts = decoded.reshape((code.k,) + coded_out.shape[1:])
+
+    # Reassemble on the width dim; master-kept remainder (footnote 2).
+    y = jnp.concatenate(list(y_parts), axis=-1)
+    if plan.remainder is not None:
+        r = plan.remainder
+        y_rem = conv2d(x[..., r.a_i : r.b_i], w, spec.stride)
+        y = jnp.concatenate([y, y_rem], axis=-1)
+    return y
+
+
+def coded_conv2d_sharded(
+    x: jax.Array,
+    w: jax.Array,
+    code: MDSCode,
+    spec: ConvSpec,
+    mesh: jax.sharding.Mesh,
+    axis: str = "model",
+) -> jax.Array:
+    """TPU-pod form: the n coded subtasks live on the ``axis`` mesh axis.
+
+    The master-side encode/decode become einsums against the generator /
+    decode matrices; XLA partitions the per-worker conv with zero cross-
+    worker communication (each device's partition is self-contained thanks
+    to the halo split).  On real hardware the fastest-k selection is done
+    by the serving runtime (core/runtime.py); inside one SPMD program all
+    n results are produced, so we decode with S = [0..k) — numerically
+    identical output, and the compiled artifact exercises the same
+    collectives (gather over the worker axis) as a fastest-k gather.
+    """
+    n = mesh.shape[axis]
+    if n != code.n:
+        raise ValueError(f"mesh axis {axis} has size {n}, code.n={code.n}")
+    plan = plan_width_split(spec, code.k)
+    parts = split_input(x, plan)  # (k, ...)
+    coded_in = _encode_partitions(code, parts)  # (n, ...)
+
+    shard_map = jax.shard_map  # jax >= 0.8
+
+    @jax.jit
+    def _run(coded_in, w):
+        def worker(xi, w):
+            # xi: (1, B, C, H, W_I^p) — this device's coded partition.
+            return conv2d(xi[0], w, spec.stride)[None]
+
+        out = shard_map(
+            worker,
+            mesh=mesh,
+            in_specs=(P(axis), P()),
+            out_specs=P(axis),
+        )(coded_in, w)
+        return out
+
+    coded_out = _run(coded_in, w)
+    subset = list(range(code.k))
+    flat = coded_out[: code.k].reshape(code.k, -1)
+    decoded = code.decode_from(subset, flat)
+    y_parts = decoded.reshape((code.k,) + coded_out.shape[1:])
+    y = jnp.concatenate(list(y_parts), axis=-1)
+    if plan.remainder is not None:
+        r = plan.remainder
+        y = jnp.concatenate([y, conv2d(x[..., r.a_i : r.b_i], w, spec.stride)], axis=-1)
+    return y

@@ -1,0 +1,93 @@
+"""Coded distributed GEMM — the transformer adaptation of CoCoI.
+
+The paper codes 2D convolution because it is linear in its input.  A GEMM
+``Y = X @ W`` is the degenerate K=S=1 case: the token dimension plays the
+role of the output width, partitions are disjoint (no halo), and the same
+(n, k)-MDS encode/decode applies row-exactly:
+
+    G (X_1..X_k) @ W  =  (G X)_1..n @ W      (linearity in X)
+
+This is what lets CoCoI act on the type-1 ops of the assigned transformer
+architectures (FFN and projection GEMMs — see DESIGN.md §4).  Nonlinear ops
+(softmax attention, SSM selective scan, activations) remain uncoded type-2
+work, mirroring the paper's type-1/type-2 split.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .coding import MDSCode
+from .splitting import SplitPlan, plan_token_split
+
+__all__ = ["coded_matmul", "coded_matmul_sharded"]
+
+
+def _encode_tokens(code: MDSCode, x: jax.Array, plan: SplitPlan) -> jax.Array:
+    """(T, d) tokens -> (n, T_p, d) coded token slices."""
+    k = code.k
+    t_p = plan.w_out_p
+    parts = x[: k * t_p].reshape(k, t_p, -1)
+    flat = parts.reshape(k, -1)
+    return code.encode(flat).reshape(code.n, t_p, x.shape[-1])
+
+
+def coded_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    code: MDSCode,
+    subset: Sequence[int],
+) -> jax.Array:
+    """Exact Y = X @ W recovered from any k of n coded worker GEMMs.
+
+    x: (T, d_in), w: (d_in, d_out).  The remainder rows (T mod k) are
+    computed by the master (paper footnote 2).
+    """
+    T = x.shape[0]
+    plan = plan_token_split(T, code.k)
+    coded_in = _encode_tokens(code, x, plan)  # (n, T_p, d_in)
+    coded_out = jnp.einsum("ntd,df->ntf", coded_in, w)  # n worker GEMMs
+    sel = coded_out[jnp.asarray(list(subset))]
+    decoded = code.decode_from(list(subset), sel.reshape(code.k, -1))
+    y = decoded.reshape(code.k * plan.w_out_p, w.shape[-1])
+    if plan.remainder is not None:
+        y = jnp.concatenate([y, x[plan.remainder.a_i :] @ w], axis=0)
+    return y
+
+
+def coded_matmul_sharded(
+    x: jax.Array,
+    w: jax.Array,
+    code: MDSCode,
+    mesh: jax.sharding.Mesh,
+    axis: str = "model",
+) -> jax.Array:
+    """Pod form: n coded GEMM subtasks on the ``axis`` mesh axis."""
+    n = mesh.shape[axis]
+    if n != code.n:
+        raise ValueError(f"mesh axis {axis} has size {n}, code.n={code.n}")
+    T = x.shape[0]
+    plan = plan_token_split(T, code.k)
+    coded_in = _encode_tokens(code, x, plan)
+
+    shard_map = jax.shard_map
+
+    @jax.jit
+    def _run(coded_in, w):
+        def worker(xi, w):
+            return jnp.einsum("ntd,df->ntf", xi, w)
+
+        return shard_map(
+            worker, mesh=mesh, in_specs=(P(axis), P()), out_specs=P(axis)
+        )(coded_in, w)
+
+    coded_out = _run(coded_in, w)
+    subset = list(range(code.k))
+    decoded = code.decode_from(subset, coded_out[: code.k].reshape(code.k, -1))
+    y = decoded.reshape(code.k * plan.w_out_p, w.shape[-1])
+    if plan.remainder is not None:
+        y = jnp.concatenate([y, x[plan.remainder.a_i :] @ w], axis=0)
+    return y

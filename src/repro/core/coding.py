@@ -1,0 +1,225 @@
+"""Coding schemes for CoCoI (paper §II-B, App. G).
+
+Implements the three redundancy schemes the paper evaluates:
+
+* ``MDSCode``      — (n, k) Vandermonde MDS code (the paper's choice, eq. 3/4).
+* ``ReplicationCode`` — 2x replication benchmark [15] (§V, "Replication").
+* ``LTCode``       — Luby-Transform rateless code benchmark (App. G, LtCoI).
+
+All schemes expose ``encode`` (k source rows -> n coded rows) and
+``decode_from`` (any sufficient subset of coded rows -> k source rows).
+Rows are flattened feature vectors, matching the paper's flatten/concat
+formulation; callers reshape around them (see splitting.py / coded_conv.py).
+
+Notes on numerics: the paper's Vandermonde nodes are implicitly integers
+(1..n).  In f32 the resulting G_S is catastrophically ill-conditioned past
+k~8, so we use Chebyshev-spaced nodes in [-1, 1] (any distinct nodes keep
+the MDS property: every kxk sub-Vandermonde is invertible).  See
+DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "vandermonde_nodes",
+    "vandermonde_generator",
+    "MDSCode",
+    "ReplicationCode",
+    "LTCode",
+    "robust_soliton",
+]
+
+
+def vandermonde_nodes(n: int, kind: str = "chebyshev") -> np.ndarray:
+    """Evaluation points g_1..g_n for the Vandermonde generator."""
+    if kind == "chebyshev":
+        # Chebyshev points of the first kind on [-1, 1]: well-conditioned.
+        i = np.arange(1, n + 1)
+        return np.cos((2 * i - 1) * np.pi / (2 * n))
+    if kind == "integer":
+        # The textbook construction the paper references [16].
+        return np.arange(1, n + 1, dtype=np.float64)
+    raise ValueError(f"unknown node kind: {kind}")
+
+
+def vandermonde_generator(n: int, k: int, kind: str = "chebyshev") -> np.ndarray:
+    """The n x k generator G of eq. (3): G[i, j] = g_i^(k-1-j)."""
+    if not 1 <= k <= n:
+        raise ValueError(f"need 1 <= k <= n, got n={n} k={k}")
+    g = vandermonde_nodes(n, kind)
+    powers = np.arange(k - 1, -1, -1)  # k-1, k-2, ..., 0
+    return np.power.outer(g, powers)  # (n, k)
+
+
+@dataclasses.dataclass(frozen=True)
+class MDSCode:
+    """(n, k) MDS code over f32/f64 with a Vandermonde generator (eq. 3/4)."""
+
+    n: int
+    k: int
+    node_kind: str = "chebyshev"
+
+    def __post_init__(self):
+        if not 1 <= self.k <= self.n:
+            raise ValueError(f"need 1 <= k <= n, got n={self.n} k={self.k}")
+
+    @property
+    def r(self) -> int:
+        """Redundancy r = n - k (tolerated stragglers/failures)."""
+        return self.n - self.k
+
+    @property
+    def generator(self) -> np.ndarray:
+        return vandermonde_generator(self.n, self.k, self.node_kind)
+
+    # -- encode -----------------------------------------------------------
+    def encode(self, sources: jax.Array) -> jax.Array:
+        """(k, F) source matrix -> (n, F) coded matrix: G @ X  (eq. 3)."""
+        if sources.shape[0] != self.k:
+            raise ValueError(f"expected {self.k} source rows, got {sources.shape[0]}")
+        G = jnp.asarray(self.generator, dtype=sources.dtype)
+        return G @ sources
+
+    # -- decode -----------------------------------------------------------
+    def decode_matrix(self, subset: Sequence[int]) -> np.ndarray:
+        """G_S^{-1} for the k-subset S of worker indices (eq. 4)."""
+        subset = list(subset)
+        if len(subset) != self.k:
+            raise ValueError(f"need exactly k={self.k} indices, got {len(subset)}")
+        if len(set(subset)) != self.k:
+            raise ValueError("subset indices must be distinct")
+        G_S = self.generator[np.asarray(subset)]
+        return np.linalg.inv(G_S)
+
+    def decode_from(self, subset: Sequence[int], coded: jax.Array) -> jax.Array:
+        """Recover (k, F) sources from the k coded rows named by ``subset``."""
+        D = jnp.asarray(self.decode_matrix(subset), dtype=coded.dtype)
+        return D @ coded
+
+    # -- latency-model scaling (eqs. 8, 12) --------------------------------
+    def encode_flops(self, row_elems: int) -> int:
+        """N^enc = 2 k n F  (eq. 8 with F = B*C_I*H_I*W_I^p)."""
+        return 2 * self.k * self.n * row_elems
+
+    def decode_flops(self, row_elems: int) -> int:
+        """N^dec = 2 k^2 F  (eq. 12 with F = B*C_O*H_O*W_O^p)."""
+        return 2 * self.k * self.k * row_elems
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicationCode:
+    """Replication benchmark [15]: k = floor(n/2) subtasks, each run twice.
+
+    coded row i (i in [n]) is source row i % k; decoding needs one copy of
+    every source row.
+    """
+
+    n: int
+
+    @property
+    def k(self) -> int:
+        return max(self.n // 2, 1)
+
+    @property
+    def r(self) -> int:
+        return self.n - self.k
+
+    def assignment(self) -> np.ndarray:
+        """coded row index -> source row index."""
+        return np.arange(self.n) % self.k
+
+    def encode(self, sources: jax.Array) -> jax.Array:
+        if sources.shape[0] != self.k:
+            raise ValueError(f"expected {self.k} source rows, got {sources.shape[0]}")
+        return sources[jnp.asarray(self.assignment())]
+
+    def decodable(self, subset: Sequence[int]) -> bool:
+        covered = {int(i) % self.k for i in subset}
+        return len(covered) == self.k
+
+    def decode_from(self, subset: Sequence[int], coded: jax.Array) -> jax.Array:
+        """Pick one received copy of each source row."""
+        assign = self.assignment()
+        chosen: dict[int, int] = {}
+        for pos, widx in enumerate(subset):
+            src = int(assign[int(widx)])
+            chosen.setdefault(src, pos)
+        if len(chosen) != self.k:
+            raise ValueError("subset does not cover all source rows")
+        order = [chosen[s] for s in range(self.k)]
+        return coded[jnp.asarray(order)]
+
+    def encode_flops(self, row_elems: int) -> int:
+        return 0  # pure copy
+
+    def decode_flops(self, row_elems: int) -> int:
+        return 0
+
+
+def robust_soliton(k: int, c: float = 0.1, delta: float = 0.05) -> np.ndarray:
+    """Robust Soliton degree distribution over degrees 1..k (App. G, [17])."""
+    if k == 1:
+        return np.array([1.0])
+    d = np.arange(1, k + 1, dtype=np.float64)
+    rho = np.zeros(k)
+    rho[0] = 1.0 / k
+    rho[1:] = 1.0 / (d[1:] * (d[1:] - 1.0))
+    R = c * np.log(k / delta) * np.sqrt(k)
+    R = max(R, 1.0)
+    tau = np.zeros(k)
+    pivot = int(np.floor(k / R))
+    pivot = min(max(pivot, 1), k)
+    for i in range(1, pivot):
+        tau[i - 1] = R / (i * k)
+    if pivot >= 1:
+        tau[pivot - 1] = R * np.log(R / delta) / k
+    dist = rho + tau
+    return dist / dist.sum()
+
+
+@dataclasses.dataclass(frozen=True)
+class LTCode:
+    """Luby-Transform rateless code (App. G): XOR-style sums of sources.
+
+    Encoded symbol = sum of d uniformly-chosen source symbols, d ~ Robust
+    Soliton.  Decoding = Gaussian elimination on the binary encoding matrix;
+    ``required`` is stochastic (the paper's n_d).
+    """
+
+    k: int
+    c: float = 0.1
+    delta: float = 0.05
+
+    def sample_encoding_matrix(self, m: int, seed: int) -> np.ndarray:
+        """m encoding vectors, each a 0/1 row of length k."""
+        rng = np.random.default_rng(seed)
+        dist = robust_soliton(self.k, self.c, self.delta)
+        rows = np.zeros((m, self.k), dtype=np.float64)
+        for i in range(m):
+            d = int(rng.choice(np.arange(1, self.k + 1), p=dist))
+            idx = rng.choice(self.k, size=d, replace=False)
+            rows[i, idx] = 1.0
+        return rows
+
+    @staticmethod
+    def decodable(rows: np.ndarray, k: int) -> bool:
+        return np.linalg.matrix_rank(rows) >= k
+
+    @staticmethod
+    def encode_with(rows: np.ndarray, sources: jax.Array) -> jax.Array:
+        E = jnp.asarray(rows, dtype=sources.dtype)
+        return E @ sources
+
+    @staticmethod
+    def decode_from(rows: np.ndarray, coded: jax.Array) -> jax.Array:
+        """Least-squares solve (== Gaussian elimination when rank is full)."""
+        E = jnp.asarray(rows, dtype=coded.dtype)
+        sol, *_ = jnp.linalg.lstsq(E, coded)
+        return sol

@@ -1,0 +1,131 @@
+"""Input/output splitting for coded distributed execution (paper §II-B.1).
+
+The split is *output-driven*: the output feature map is cut into k equal
+width-slices, and each slice's input range is derived from the conv
+geometry (eqs. 1-2):
+
+    W_I^p(k) = K_W + (W_O^p(k) - 1) * S_W                       (1)
+    a_I = a_O * S_W,   b_I = (b_O - 1) * S_W + K_W              (2)
+
+Adjacent input partitions overlap by the halo K_W - S_W.  When W_O is not
+divisible by k the master keeps the remainder subtask locally (paper
+footnote 2).
+
+For transformer GEMMs (coded_linear) the "conv" degenerates to K=S=1:
+partitions are disjoint token slices with no halo.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+__all__ = ["ConvSpec", "Partition", "SplitPlan", "plan_width_split", "plan_token_split"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Geometry of a 2D conv layer (paper Table II).
+
+    Width/height of the *padded* input I; kernel/stride on the width dim.
+    """
+
+    c_in: int
+    c_out: int
+    h_in: int
+    w_in: int  # padded input width W_I
+    kernel: int  # K_W (square kernel)
+    stride: int = 1
+    batch: int = 1
+
+    @property
+    def w_out(self) -> int:
+        return (self.w_in - self.kernel) // self.stride + 1
+
+    @property
+    def h_out(self) -> int:
+        return (self.h_in - self.kernel) // self.stride + 1
+
+    def subtask_flops(self, w_out_p: int) -> int:
+        """N^cmp(k) of eq. (9) for an output slice of width w_out_p."""
+        return (
+            self.batch * self.c_out * self.h_out * w_out_p * 2 * self.c_in * self.kernel ** 2
+        )
+
+    def recv_bytes(self, w_in_p: int) -> int:
+        """N^rec(k) of eq. (10): f32 bytes of one input partition."""
+        return 4 * self.batch * self.c_in * self.h_in * w_in_p
+
+    def send_bytes(self, w_out_p: int) -> int:
+        """N^sen(k) of eq. (11): f32 bytes of one output partition."""
+        return 4 * self.batch * self.c_out * self.h_out * w_out_p
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """One source subtask: output range [a_o, b_o) and input range [a_i, b_i)."""
+
+    a_o: int
+    b_o: int
+    a_i: int
+    b_i: int
+
+    @property
+    def w_out(self) -> int:
+        return self.b_o - self.a_o
+
+    @property
+    def w_in(self) -> int:
+        return self.b_i - self.a_i
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitPlan:
+    """k equal partitions + an optional master-kept remainder (footnote 2)."""
+
+    k: int
+    parts: Tuple[Partition, ...]
+    remainder: Partition | None  # executed locally by the master
+
+    @property
+    def w_out_p(self) -> int:
+        return self.parts[0].w_out
+
+    @property
+    def w_in_p(self) -> int:
+        return self.parts[0].w_in
+
+
+def plan_width_split(spec: ConvSpec, k: int) -> SplitPlan:
+    """Split ``spec``'s output into k equal width slices (eqs. 1-2)."""
+    w_o = spec.w_out
+    if not 1 <= k <= w_o:
+        raise ValueError(f"need 1 <= k <= W_O={w_o}, got k={k}")
+    w_o_p = w_o // k  # floor(W_O / k)
+    parts: List[Partition] = []
+    for i in range(k):
+        a_o, b_o = i * w_o_p, (i + 1) * w_o_p
+        a_i = a_o * spec.stride
+        b_i = (b_o - 1) * spec.stride + spec.kernel
+        parts.append(Partition(a_o, b_o, a_i, b_i))
+    rem = None
+    if w_o % k:
+        a_o, b_o = k * w_o_p, w_o
+        rem = Partition(a_o, b_o, a_o * spec.stride, (b_o - 1) * spec.stride + spec.kernel)
+    # sanity: equal widths, eq. (1) satisfied, coverage of the input
+    assert all(p.w_out == w_o_p for p in parts)
+    assert all(p.w_in == spec.kernel + (w_o_p - 1) * spec.stride for p in parts)
+    return SplitPlan(k=k, parts=tuple(parts), remainder=rem)
+
+
+def plan_token_split(num_tokens: int, k: int) -> SplitPlan:
+    """Degenerate K=S=1 split for linear ops: disjoint token slices."""
+    if not 1 <= k <= num_tokens:
+        raise ValueError(f"need 1 <= k <= tokens={num_tokens}, got k={k}")
+    t_p = num_tokens // k
+    parts = tuple(
+        Partition(i * t_p, (i + 1) * t_p, i * t_p, (i + 1) * t_p) for i in range(k)
+    )
+    rem = None
+    if num_tokens % k:
+        rem = Partition(k * t_p, num_tokens, k * t_p, num_tokens)
+    return SplitPlan(k=k, parts=parts, remainder=rem)

@@ -1,0 +1,3 @@
+from .pipeline import TokenStream, ImageStream
+
+__all__ = ["TokenStream", "ImageStream"]

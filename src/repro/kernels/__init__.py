@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for CoCoI's compute hot-spots.
+
+The paper's type-1 bottleneck is the 2D conv subtask; its master-side
+hot-spot is the MDS encode GEMM; the Mamba2 architectures add the SSD
+chunk scan.  Each kernel: <name>.py (pl.pallas_call + BlockSpec),
+wrapped in ops.py, oracled in ref.py, swept in tests/test_kernels.py.
+Validated with interpret=True on CPU; TPU is the compilation target.
+"""
+from .ops import conv2d_subtask, mds_encode, ssd_chunk
+
+__all__ = ["conv2d_subtask", "mds_encode", "ssd_chunk"]

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: MDS encode GEMM  G (n, k) @ X (k, F) -> (n, F).
+
+The paper's encode (eq. 3) is a skinny GEMM over the flattened input
+partitions: k is tiny (<= 16), F is huge (B*C_I*H_I*W_I^p).  On the Pi
+this runs on the master CPU; on TPU it is purely memory-bound, so the
+kernel streams F through VMEM in MXU-aligned tiles while the whole
+generator G stays resident:
+
+  grid  = (F // BLOCK_F,)
+  G     : (n, k)          VMEM-resident, same block every step
+  X     : (k, BLOCK_F)    streamed
+  out   : (n, BLOCK_F)    streamed
+
+n and k are padded to 8 (sublane) by the wrapper in ops.py; BLOCK_F is a
+multiple of 128 (lane width).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["mds_encode_pallas", "BLOCK_F"]
+
+BLOCK_F = 512
+
+
+def _encode_kernel(g_ref, x_ref, o_ref):
+    g = g_ref[...]          # (n, k)
+    x = x_ref[...]          # (k, BLOCK_F)
+    o_ref[...] = jnp.dot(g, x, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def mds_encode_pallas(G: jax.Array, x: jax.Array, *, block_f: int = BLOCK_F,
+                      interpret: bool = True) -> jax.Array:
+    """G: (n, k), x: (k, F) -> (n, F).  F padded to block_f internally."""
+    n, k = G.shape
+    kf, F = x.shape
+    assert kf == k, (G.shape, x.shape)
+    pad = -F % block_f
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    Fp = F + pad
+    out = pl.pallas_call(
+        _encode_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, Fp), x.dtype),
+        grid=(Fp // block_f,),
+        in_specs=[
+            pl.BlockSpec((n, k), lambda i: (0, 0)),          # G resident
+            pl.BlockSpec((k, block_f), lambda i: (0, i)),    # stream X
+        ],
+        out_specs=pl.BlockSpec((n, block_f), lambda i: (0, i)),
+        interpret=interpret,
+    )(G.astype(x.dtype), x)
+    return out[:, :F]

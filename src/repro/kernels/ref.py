@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mds_encode_ref", "conv2d_ref", "ssd_chunk_ref"]
+
+
+def mds_encode_ref(G: jax.Array, x: jax.Array) -> jax.Array:
+    """(n, k) @ (k, F) -> (n, F): the paper's encode GEMM (eq. 3)."""
+    return jnp.dot(G, x, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """VALID conv, CHW x OIHW -> OHW (single image — the worker subtask)."""
+    out = jax.lax.conv_general_dilated(
+        x[None], w, window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return out[0]
+
+
+def ssd_chunk_ref(x, dt, A, Bm, Cm, h0):
+    """One SSD chunk, sequential-scan oracle.
+
+    x: (L, H, P); dt: (L, H); A: (H,); Bm/Cm: (L, N); h0: (H, P, N).
+    Returns (y: (L, H, P), h_final).
+    """
+    L = x.shape[0]
+
+    def step(h, t):
+        decay = jnp.exp(dt[t] * A)  # (H,)
+        h = h * decay[:, None, None] + jnp.einsum(
+            "h,n,hp->hpn", dt[t], Bm[t], x[t])
+        y = jnp.einsum("n,hpn->hp", Cm[t], h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                         jnp.arange(L))
+    return ys.astype(x.dtype), h

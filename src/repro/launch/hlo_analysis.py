@@ -1,0 +1,159 @@
+"""Compiled-HLO analysis: collective bytes + roofline terms.
+
+cost_analysis() gives HLO FLOPs and bytes accessed, but not collective
+traffic — we parse the optimized (post-SPMD) HLO text and sum the result
+sizes of every collective op (brief: ROOFLINE ANALYSIS).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HW", "Hardware", "collective_bytes", "Roofline", "roofline_from"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective kind over the optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if " = " not in stripped:
+            continue
+        lhs, rhs = stripped.split(" = ", 1)
+        op = None
+        for k in _COLLECTIVES:
+            # match the op name at the start of the rhs expression,
+            # e.g. "bf16[8,128]{1,0} all-gather(...)" or fusion-free forms
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                op = k
+                break
+        if op is None:
+            continue
+        if f"{op}-done(" in rhs:
+            continue  # counted at -start
+        total = sum(_shape_bytes(d, dims) for d, dims in _TYPE_RE.findall(
+            rhs.split("(", 1)[0]))
+        out[op] += total
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = 197e12   # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9        # bytes/s per chip
+    ici_bw: float = 50e9         # bytes/s per link
+
+
+HW = Hardware()
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    """Three-term roofline for one (arch, shape, mesh) dry-run.
+
+    ``flops`` / ``hbm_bytes`` / ``coll_bytes`` are PER-DEVICE values: XLA's
+    cost_analysis and the compiled HLO text describe the post-SPMD
+    per-device program (verified empirically — a (data, model)-sharded dot
+    reports local-shard FLOPs).  ``model_flops`` is the GLOBAL useful
+    6*N*D (6*N_active*D for MoE) figure.
+    """
+    flops: float              # per-device HLO FLOPs
+    hbm_bytes: float          # per-device bytes accessed
+    coll_bytes: float         # per-device collective bytes moved
+    chips: int
+    model_flops: float        # global 6*N*D useful FLOPs
+    per_device_mem: float     # peak bytes per device (memory_analysis)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / HW.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HW.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / HW.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — fraction of compiled compute
+        that is useful (catches remat/redundancy/padding waste)."""
+        return self.model_flops / (self.flops * self.chips) if self.flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops": self.flops,
+            "useful_ratio": self.useful_ratio,
+            "per_device_mem_gb": self.per_device_mem / 2**30,
+        }
+
+
+def roofline_from(cost: dict, colls: dict[str, int], chips: int,
+                  model_flops: float, per_device_mem: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    return Roofline(flops=flops, hbm_bytes=hbm,
+                    coll_bytes=float(sum(colls.values())), chips=chips,
+                    model_flops=model_flops, per_device_mem=per_device_mem)
+
+
+_CONVERT_RE = re.compile(
+    r"= (f32)\[([0-9,]*)\][^=]*convert\(")
+
+
+def convert_penalty_bytes(hlo_text: str) -> int:
+    """CPU-lowering artifact estimator: XLA-CPU has no native bf16 GEMM, so
+    every bf16 dot operand is converted to an f32 copy (write 4n) that the
+    dot then reads at twice the width.  A TPU reads bf16 natively, so the
+    TPU-equivalent traffic removes ~2*4n bytes per converted element:
+    the f32 write (4n) plus the read-width delta (4n - 2n) plus the extra
+    bf16 read the convert itself performs (2n) ~= 8n.
+    """
+    total = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _CONVERT_RE.search(stripped)
+        if not m:
+            continue
+        dims = m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        if n >= 1 << 16:  # only bulk tensors; scalars/norms are noise
+            total += 8 * n
+    return total

@@ -1,0 +1,31 @@
+"""Production mesh construction (brief: MULTI-POD DRY-RUN step 1).
+
+Defined as functions so importing this module never touches jax device
+state (device count is locked at first backend init).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "dp_axes", "MODEL_AXIS"]
+
+MODEL_AXIS = "model"
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1x1 mesh on whatever devices exist (smoke tests, CPU)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple:
+    """Every mesh axis except the model/worker axis — used for batch/seq."""
+    return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)

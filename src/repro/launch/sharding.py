@@ -1,0 +1,195 @@
+"""Partitioning rules: param/input/cache PartitionSpecs by pytree path.
+
+MaxText-style logical rules, applied by leaf key:
+
+* tensor parallelism on the ``model`` axis — attention heads, FFN hidden,
+  MoE experts, vocab;
+* FSDP on the ``data`` axis (+ ``pod`` when present) over d_model dims —
+  this is what lets the ≥30B and the 1T-param MoE configs fit;
+* batch (and long-context cache sequence) over the data axes.
+
+GQA note: kv-head counts (1-8) are below the 16-way model axis on several
+archs; GSPMD pads those shardings.  That waste shows up in the roofline
+table and is one of the §Perf hillclimb levers.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import MODEL_AXIS, dp_axes
+
+__all__ = ["param_specs", "param_shardings", "input_sharding", "cache_shardings",
+           "batch_spec"]
+
+
+def _fsdp(mesh: Mesh, fsdp: bool):
+    return dp_axes(mesh) if fsdp else None
+
+
+def _extent(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    e = 1
+    for a in axes:
+        e *= mesh.shape[a]
+    return e
+
+
+def sanitize(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop (or shrink) axis assignments that don't divide the dimension.
+
+    Input shardings must tile evenly (GSPMD pads intermediates, not
+    arguments).  Tuple entries shrink from the left: ('pod','data') ->
+    ('data',) -> None.
+    """
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        while axes and dim % _extent(mesh, tuple(axes)):
+            axes = tuple(axes)[1:]
+        out.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
+def _spec_candidates(key: str, is_moe: bool, mesh: Mesh, fsdp: bool) -> list[P]:
+    """Ordered candidate specs per param kind; the first one that survives
+    sanitisation with the model axis intact wins."""
+    F = _fsdp(mesh, fsdp)
+    M = MODEL_AXIS
+    if key == "embed":
+        return [P(M, F), P(None, F)]
+    if key in ("wq", "wk", "wv"):
+        # (D, H|K, P): heads on model; fall back to head_dim when the head
+        # count doesn't divide the axis (MQA/GQA with few kv heads).
+        return [P(F, M, None), P(F, None, M)]
+    if key == "wo":
+        return [P(M, None, F), P(None, M, F)]
+    if key in ("w_in", "w_gate"):
+        if is_moe:  # (E, D, F): expert parallel
+            return [P(M, F, None)]
+        return [P(F, M)]
+    if key == "w_out":
+        if is_moe:  # (E, F, D)
+            return [P(M, None, F)]
+        return [P(M, F)]
+    if key == "router":
+        return [P(F, None)]
+    if key == "in_proj":  # mamba (D, in_proj_dim)
+        return [P(F, M)]
+    if key == "out_proj":  # mamba (d_inner, D)
+        return [P(M, F)]
+    if key == "conv_w":
+        return [P(M, None)]
+    if key == "conv_b":
+        return [P(M)]
+    if key == "gate_norm":
+        return [P(M)]
+    # norms, A_log, D, dt_bias, q_norm/k_norm, scalars: replicated
+    return [P()]
+
+
+def _spec_for_param(path: tuple, shape: tuple, mesh: Mesh, fsdp: bool) -> P:
+    keys = [str(p.key) if hasattr(p, "key") else str(p) for p in path]
+    key = keys[-1]
+    is_moe = "moe" in keys
+    cands = _spec_candidates(key, is_moe, mesh, fsdp)
+
+    def fit(spec: P) -> P:
+        # pad with trailing Nones to the leaf rank; prepend None for the
+        # stacked layer dim when the leaf has one extra leading dim
+        spec = tuple(spec)
+        if len(spec) < len(shape):
+            spec = (None,) * (len(shape) - len(spec)) + spec
+        return P(*spec[: len(shape)])
+
+    best = None
+    for cand in cands:
+        s = sanitize(fit(cand), shape, mesh)
+        if best is None:
+            best = s
+        if MODEL_AXIS in jax.tree.leaves(tuple(s)):
+            return s
+    return best
+
+
+def param_specs(param_shapes: Any, mesh: Mesh, fsdp: bool = True):
+    """Pytree of PartitionSpec matching a tree of ShapeDtypeStruct/arrays."""
+    def f(path, leaf):
+        return _spec_for_param(path, leaf.shape, mesh, fsdp)
+    return jax.tree_util.tree_map_with_path(f, param_shapes)
+
+
+def param_shardings(param_shapes: Any, mesh: Mesh, fsdp: bool = True):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(param_shapes, mesh, fsdp))
+
+
+def batch_spec(mesh: Mesh, batch: int) -> Any:
+    """Batch axes for the leading dim; falls back to unsharded when batch
+    is smaller than the data-parallel extent (long_500k's batch=1)."""
+    dp = dp_axes(mesh)
+    extent = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    return dp if batch % max(extent, 1) == 0 and batch >= extent else None
+
+
+def input_sharding(mesh: Mesh, batch: int, ndim: int) -> NamedSharding:
+    """tokens/labels (B, T) or embeds (B, T, D): shard batch over data axes."""
+    b = batch_spec(mesh, batch)
+    spec = sanitize(P(b, *([None] * (ndim - 1))),
+                    (batch,) + (1 << 30,) * (ndim - 1), mesh)
+    return NamedSharding(mesh, spec)
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh, batch: int):
+    """KV/SSM cache tree: batch over data axes; heads over model; for
+    batch=1 long-context, shard the cache *sequence* over data instead."""
+    b = batch_spec(mesh, batch)
+    seq_axis = None if b is not None else dp_axes(mesh)
+
+    def f(path, leaf):
+        keys = [str(p.key) if hasattr(p, "key") else str(p) for p in path]
+        nd = len(leaf.shape)
+        if nd == 0:  # pos scalar
+            return NamedSharding(mesh, P())
+
+        def lead(spec: P) -> P:
+            """Prepend None for the stacked layer dim when present."""
+            if nd == len(spec) + 1:
+                return P(None, *spec)
+            return spec
+
+        if keys[-1] in ("k", "v"):
+            # KV ring cache (B, S, K, P) [+leading L].  Preferred: kv heads
+            # on model.  When the kv-head count doesn't divide the axis
+            # (GQA/MQA), shard the cache SEQUENCE over model instead —
+            # flash-decoding style: per-shard partial softmax + small
+            # combines, instead of all-gathering the multi-GB cache.
+            if b is None:
+                seq2 = tuple(dp_axes(mesh)) + (MODEL_AXIS,)
+            else:
+                seq2 = MODEL_AXIS
+            for cand in (P(b, seq_axis, MODEL_AXIS, None),
+                         P(b, seq2, None, None)):
+                s = sanitize(lead(cand), leaf.shape, mesh)
+                if MODEL_AXIS in jax.tree.leaves(tuple(s)):
+                    return NamedSharding(mesh, s)
+            return NamedSharding(
+                mesh, sanitize(lead(P(b, seq_axis, None, None)), leaf.shape, mesh))
+        if keys[-1] == "conv":  # (B, conv_dim, W) [+L]
+            return NamedSharding(
+                mesh, sanitize(lead(P(b, MODEL_AXIS, None)), leaf.shape, mesh))
+        if keys[-1] == "ssm":  # (B, H, P, N) [+L]
+            return NamedSharding(
+                mesh, sanitize(lead(P(b, MODEL_AXIS, None, None)),
+                               leaf.shape, mesh))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)

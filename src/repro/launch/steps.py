@@ -1,0 +1,177 @@
+"""Step functions (train / prefill / serve) + input specs for every
+(arch x input-shape) combination.
+
+``input_specs(cfg, shape, mesh)`` returns ShapeDtypeStruct stand-ins with
+NamedShardings attached — shardable, weak-type-correct, no device
+allocation — which is what the dry-run lowers against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import InputShape, for_shape
+from ..models import model as M
+from ..optim import adamw_init, adamw_update, cosine_schedule, wsd_schedule
+from .mesh import dp_axes
+from .sharding import cache_shardings, input_sharding, param_shardings
+
+__all__ = ["make_train_step", "make_serve_step", "make_prefill_step",
+           "abstract_params", "abstract_opt_state", "abstract_cache",
+           "input_specs", "step_and_specs"]
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL, stable in f32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_train_step(cfg: M.ModelConfig, base_lr: float = 3e-4,
+                    total_steps: int = 10_000,
+                    microbatches: int = 1) -> Callable:
+    """(params, opt_state, batch, step) -> (params, opt_state, loss).
+
+    minicpm uses its WSD schedule (the arch's signature trick); everything
+    else uses cosine.  ``microbatches`` > 1 splits the batch and
+    accumulates gradients with lax.scan — activation memory scales with
+    B/microbatches instead of B (§Perf lever).
+    """
+    if cfg.name.startswith("minicpm"):
+        sched = wsd_schedule(base_lr, warmup=total_steps // 100,
+                             stable=int(total_steps * 0.89),
+                             decay=total_steps // 10)
+    else:
+        sched = cosine_schedule(base_lr, warmup=total_steps // 100,
+                                total=total_steps)
+
+    def loss_fn(params, batch):
+        logits = M.forward(cfg, params, tokens=batch.get("tokens"),
+                           embeds=batch.get("embeds"))
+        return cross_entropy(logits, batch["labels"])
+
+    def train_step(params, opt_state, batch, step):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mb = {k: v.reshape(microbatches, v.shape[0] // microbatches,
+                               *v.shape[1:]) for k, v in batch.items()}
+
+            def acc(carry, mbatch):
+                loss_acc, g_acc = carry
+                loss_i, g_i = jax.value_and_grad(loss_fn)(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, g_i)
+                return (loss_acc + loss_i, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), zeros), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        params, opt_state = adamw_update(params, grads, opt_state, sched(step))
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_serve_step(cfg: M.ModelConfig) -> Callable:
+    """(params, cache, batch) -> (logits, cache): ONE new token against the
+    populated KV/SSM cache (the decode_32k / long_500k shapes)."""
+    def serve_step(params, cache, batch):
+        return M.decode_step(cfg, params, cache, token=batch.get("tokens"),
+                             embed=batch.get("embeds"))
+    return serve_step
+
+
+def make_prefill_step(cfg: M.ModelConfig, max_seq: int) -> Callable:
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, tokens=batch.get("tokens"),
+                         embeds=batch.get("embeds"), max_seq=max_seq)
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# abstract (no-allocation) inputs
+# ---------------------------------------------------------------------------
+
+def _with_sharding(tree, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+def abstract_params(cfg: M.ModelConfig, mesh, fsdp: bool = True):
+    shapes = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return _with_sharding(shapes, param_shardings(shapes, mesh, fsdp))
+
+
+def abstract_opt_state(params_abstract, mesh, fsdp: bool = True):
+    shapes = jax.eval_shape(adamw_init, params_abstract)
+    # optimizer moments follow the param partitioning; step is replicated
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mu = param_shardings(shapes.mu, mesh, fsdp)
+    nu = param_shardings(shapes.nu, mesh, fsdp)
+    return type(shapes)(
+        step=jax.ShapeDtypeStruct(shapes.step.shape, shapes.step.dtype,
+                                  sharding=NamedSharding(mesh, P())),
+        mu=_with_sharding(shapes.mu, mu),
+        nu=_with_sharding(shapes.nu, nu),
+    )
+
+
+def abstract_cache(cfg: M.ModelConfig, mesh, batch: int, seq: int):
+    shapes = jax.eval_shape(lambda: M.init_cache(cfg, batch, seq))
+    return _with_sharding(shapes, cache_shardings(shapes, mesh, batch))
+
+
+def input_specs(cfg: M.ModelConfig, shape: InputShape, mesh) -> dict:
+    """ShapeDtypeStruct stand-ins for the step's data arguments."""
+    B, T = shape.global_batch, shape.seq_len
+    Bt = B if shape.kind != "decode" else B  # decode batch, 1 token
+    seq = 1 if shape.kind == "decode" else T
+    out: dict[str, Any] = {}
+    if cfg.frontend != "none":
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (B, seq, cfg.d_model), cfg.dtype,
+            sharding=input_sharding(mesh, B, 3))
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (B, seq), jnp.int32, sharding=input_sharding(mesh, B, 2))
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct(
+            (B, T), jnp.int32, sharding=input_sharding(mesh, B, 2))
+    return out
+
+
+def step_and_specs(cfg: M.ModelConfig, shape: InputShape, mesh,
+                   fsdp: bool = True):
+    """Returns (step_fn, args_tree) ready for jax.jit(...).lower(*args)."""
+    cfg = for_shape(cfg, shape)
+    batch = input_specs(cfg, shape, mesh)
+    params = abstract_params(cfg, mesh, fsdp)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if shape.kind == "train":
+        step_fn = make_train_step(cfg)
+        opt = abstract_opt_state(params, mesh, fsdp)
+        step = jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=NamedSharding(mesh, P()))
+        return step_fn, (params, opt, batch, step)
+    if shape.kind == "prefill":
+        step_fn = make_prefill_step(cfg, max_seq=shape.seq_len)
+        return step_fn, (params, batch)
+    # decode: cache of seq_len (ring-capped at the sliding window if set)
+    step_fn = make_serve_step(cfg)
+    cache = abstract_cache(cfg, mesh, shape.global_batch, shape.seq_len)
+    return step_fn, (params, cache, batch)

@@ -1,0 +1,78 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Runs real optimisation steps on CPU (smoke-scale) or lowers the full config
+on the production mesh (--dry-run delegates to dryrun.py).  Checkpoints via
+repro.checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import save_checkpoint
+from ..configs import ARCHS, get_config, smoke_config
+from ..data import TokenStream
+from ..models import init_params, param_count
+from ..optim import adamw_init
+from .steps import make_train_step
+
+__all__ = ["main", "train_loop"]
+
+
+def train_loop(cfg, steps: int = 50, batch: int = 4, seq: int = 64,
+               base_lr: float = 3e-4, ckpt_dir: str | None = None,
+               log_every: int = 10, seed: int = 0):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg, base_lr=base_lr,
+                                      total_steps=max(steps, 10)))
+    stream = iter(TokenStream(vocab=cfg.vocab, batch=batch, seq=seq, seed=seed))
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        tokens, labels = next(stream)
+        if cfg.frontend != "none":
+            emb = (np.random.default_rng(step).standard_normal(
+                (batch, seq, cfg.d_model)).astype(np.float32) * 0.05)
+            batch_d = {"embeds": jnp.asarray(emb, cfg.dtype),
+                       "labels": jnp.asarray(labels)}
+        else:
+            batch_d = {"tokens": jnp.asarray(tokens),
+                       "labels": jnp.asarray(labels)}
+        params, opt, loss = step_fn(params, opt, batch_d,
+                                    jnp.asarray(step, jnp.int32))
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:4d}  loss {losses[-1]:.4f}  "
+                  f"({(time.time() - t0) / (step + 1):.2f}s/step)")
+    if ckpt_dir:
+        path = save_checkpoint(ckpt_dir, steps, {"params": params})
+        print(f"checkpoint -> {path}")
+    return params, losses
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCHS), default="internvl2-1b")
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced config (CPU-runnable); full configs are "
+                    "exercised via the dry-run")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"training {cfg.name} ({param_count(init_params(cfg, jax.random.PRNGKey(0))):,} params)")
+    _, losses = train_loop(cfg, steps=args.steps, batch=args.batch,
+                           seq=args.seq, ckpt_dir=args.ckpt)
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return 0 if losses[-1] < losses[0] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,27 @@
+from .model import (
+    ModelConfig,
+    init_params,
+    forward,
+    prefill,
+    decode_step,
+    init_cache,
+    param_count,
+)
+from .ssm import SSMDims, ssd_chunked, ssd_step
+from .cnn import (
+    vgg16_conv_specs,
+    resnet18_conv_specs,
+    is_type1,
+    init_small_cnn,
+    small_cnn_forward,
+)
+from .frontends import synthetic_frames, synthetic_patches
+
+__all__ = [
+    "ModelConfig", "init_params", "forward", "prefill", "decode_step",
+    "init_cache", "param_count",
+    "SSMDims", "ssd_chunked", "ssd_step",
+    "vgg16_conv_specs", "resnet18_conv_specs", "is_type1",
+    "init_small_cnn", "small_cnn_forward",
+    "synthetic_frames", "synthetic_patches",
+]

@@ -1,0 +1,321 @@
+"""Attention: blockwise (memory-efficient) causal attention with GQA/MQA,
+optional sliding window, and single-token decode attention over a ring
+KV cache.
+
+The blockwise form (online softmax over KV blocks, sequential map over Q
+blocks) bounds the live score tensor to (B, K, G, block_q, block_k) — this
+is what lets the 32k-prefill shapes lower with sane memory on the pod mesh,
+and is the pure-JAX analogue of a flash kernel (the Pallas kernel in
+``repro.kernels`` implements the same schedule for TPU VMEM).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["blockwise_causal_attention", "decode_attention", "flash_causal_attention"]
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(qb: jax.Array, kb: jax.Array) -> jax.Array:
+    """qb: (B, bq, K, G, P), kb: (B, bk, K, P) -> (B, K, G, bq, bk) f32."""
+    return jnp.einsum("bqkgp,bskp->bkgqs", qb, kb, preferred_element_type=jnp.float32)
+
+
+def blockwise_causal_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """Causal (optionally sliding-window) attention.
+
+    q: (B, T, H, P); k, v: (B, T, K, P) with H = K * G (GQA).
+    Returns (B, T, H, P) in q.dtype.
+    """
+    B, T, H, P = q.shape
+    K = k.shape[2]
+    G = H // K
+    block_q = min(block_q, T)
+    block_k = min(block_k, T)
+    # pad T to block multiples: padded keys sit at positions > every real
+    # query so the causal mask hides them; padded query rows are sliced off.
+    pad = -T % math.lcm(block_q, block_k)
+    if pad:
+        p4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, p4), jnp.pad(k, p4), jnp.pad(v, p4)
+    Tf = T + pad
+    nq, nk = Tf // block_q, Tf // block_k
+    scale = P ** -0.5
+
+    qb = q.reshape(B, nq, block_q, K, G, P).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nk, block_k, K, P).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, block_k, K, P).transpose(1, 0, 2, 3, 4)
+
+    q_pos = jnp.arange(block_q)
+    k_pos = jnp.arange(block_k)
+
+    def one_q_block(args):
+        qi, qblk = args  # qblk: (B, bq, K, G, P)
+
+        def kv_step(carry, args2):
+            m, l, acc = carry
+            ki, kblk, vblk = args2
+            s = _gqa_scores(qblk, kblk) * scale  # (B, K, G, bq, bk)
+            abs_q = qi * block_q + q_pos  # (bq,)
+            abs_k = ki * block_k + k_pos  # (bk,)
+            mask = abs_k[None, :] <= abs_q[:, None]
+            if window:
+                mask &= (abs_q[:, None] - abs_k[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskp->bkgqp", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, K, G, block_q, P), jnp.float32)
+        if unroll:
+            carry = (m0, l0, a0)
+            for ki in range(nk):
+                carry, _ = kv_step(carry, (jnp.asarray(ki), kb[ki], vb[ki]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb)
+            )
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # (B, K, G, bq, P)
+        return out.transpose(0, 3, 1, 2, 4)  # (B, bq, K, G, P)
+
+    if unroll:
+        outs = jnp.stack([one_q_block((jnp.asarray(qi), qb[qi]))
+                          for qi in range(nq)])
+    else:
+        outs = jax.lax.map(one_q_block, (jnp.arange(nq), qb))  # (nq, B, bq, K, G, P)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tf, H, P)[:, :T]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+) -> jax.Array:
+    """One-token attention over a ring KV cache.
+
+    q: (B, 1, H, P); caches: (B, S, K, P); pos: scalar int32 (the absolute
+    position of the new token).  Slots carry RoPE'd keys, so softmax is
+    order-agnostic; the mask only hides never-written slots.
+    Returns (B, 1, H, P).
+    """
+    B, S, K, P = k_cache.shape
+    H = q.shape[2]
+    G = H // K
+    scale = P ** -0.5
+    qr = q.reshape(B, 1, K, G, P)
+    s = jnp.einsum("bqkgp,bskp->bkgqs", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (jnp.arange(S) <= pos) | (pos >= S)  # ring: all valid after wrap
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskp->bqkgp", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, P).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with a custom VJP (beyond-paper §Perf optimisation)
+# ---------------------------------------------------------------------------
+#
+# The plain blockwise forward above, when differentiated by JAX, saves the
+# per-(q-block, kv-block) probability tensors for the backward pass — an
+# O(T^2) residual that dominates training memory (see EXPERIMENTS.md §Perf).
+# The flash form recomputes scores block-by-block in the backward pass, so
+# the only residuals are q, k, v, out, and the (B, K, G, T) logsumexp.
+
+def _flash_fwd_impl(q, k, v, window, block_q, block_k):
+    """Returns (out (B,T,H,P), lse (B,K,G,T)) — padded internally."""
+    B, T, H, P = q.shape
+    K = k.shape[2]
+    G = H // K
+    block_q = min(block_q, T)
+    block_k = min(block_k, T)
+    pad = -T % math.lcm(block_q, block_k)
+    if pad:
+        p4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, p4), jnp.pad(k, p4), jnp.pad(v, p4)
+    Tf = T + pad
+    nq, nk = Tf // block_q, Tf // block_k
+    scale = P ** -0.5
+    qb = q.reshape(B, nq, block_q, K, G, P).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nk, block_k, K, P).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, block_k, K, P).transpose(1, 0, 2, 3, 4)
+    q_pos, k_pos = jnp.arange(block_q), jnp.arange(block_k)
+
+    def one_q_block(args):
+        qi, qblk = args
+
+        def kv_step(carry, args2):
+            m, l, acc = carry
+            ki, kblk, vblk = args2
+            s = _gqa_scores(qblk, kblk) * scale
+            abs_q = qi * block_q + q_pos
+            abs_k = ki * block_k + k_pos
+            mask = abs_k[None, :] <= abs_q[:, None]
+            if window:
+                mask &= (abs_q[:, None] - abs_k[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskp->bkgqp", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc * corr[..., None] + pv), None
+
+        m0 = jnp.full((B, K, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, K, G, block_q, P), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (B, K, G, bq)
+        return out.transpose(0, 3, 1, 2, 4), lse
+
+    outs, lses = jax.lax.map(one_q_block, (jnp.arange(nq), qb))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tf, H, P)[:, :T]
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, K, G, Tf)[..., :T]
+    return out.astype(q.dtype), lse
+
+
+def _flash_block_args(x, T, block, B, K, P, heads_grouped):
+    pad = -T % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    n = (T + pad) // block
+    if heads_grouped:  # (B, T, K, G, P) -> (n, B, blk, K, G, P)
+        return x.reshape(B, n, block, K, -1, P).transpose(1, 0, 2, 3, 4, 5)
+    return x.reshape(B, n, block, K, P).transpose(1, 0, 2, 3, 4)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_causal_attention(q, k, v, window=0, block_q=512, block_k=512):
+    out, _ = _flash_fwd_impl(q, k, v, window, block_q, block_k)
+    return out
+
+
+def _flash_fwd(q, k, v, window, block_q, block_k):
+    out, lse = _flash_fwd_impl(q, k, v, window, block_q, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(window, block_q, block_k, res, dout):
+    q, k, v, out, lse = res
+    B, T, H, P = q.shape
+    K = k.shape[2]
+    G = H // K
+    block_q = min(block_q, T)
+    block_k = min(block_k, T)
+    scale = P ** -0.5
+    f32 = jnp.float32
+    # D_i = sum_p dout_i * out_i  (B, K, G, T)
+    D = jnp.einsum("bthp,bthp->bth", dout.astype(f32), out.astype(f32))
+    D = D.reshape(B, T, K, G).transpose(0, 2, 3, 1)
+    lse_b = _flash_block_args(lse.transpose(0, 3, 1, 2), T, block_q, B, K, 1,
+                              True)  # (nq, B, bq, K, G, 1)? see below
+    # simpler: reshape lse/D per q block directly
+    padq = -T % block_q
+    padk = -T % block_k
+    Tq, Tk = T + padq, T + padk
+    nq, nk = Tq // block_q, Tk // block_k
+
+    def pad_t(x, pad, axis=1):
+        if pad:
+            cfg = [(0, 0)] * x.ndim
+            cfg[axis] = (0, pad)
+            return jnp.pad(x, cfg)
+        return x
+
+    qb = pad_t(q, padq).reshape(B, nq, block_q, K, G, P).transpose(
+        1, 0, 2, 3, 4, 5)
+    doutb = pad_t(dout, padq).reshape(B, nq, block_q, K, G, P).transpose(
+        1, 0, 2, 3, 4, 5)
+    kb = pad_t(k, padk).reshape(B, nk, block_k, K, P).transpose(1, 0, 2, 3, 4)
+    vb = pad_t(v, padk).reshape(B, nk, block_k, K, P).transpose(1, 0, 2, 3, 4)
+    lseb = pad_t(lse, padq, axis=3).reshape(B, K, G, nq, block_q).transpose(
+        3, 0, 1, 2, 4)  # (nq, B, K, G, bq)
+    Db = pad_t(D, padq, axis=3).reshape(B, K, G, nq, block_q).transpose(
+        3, 0, 1, 2, 4)
+    q_pos, k_pos = jnp.arange(block_q), jnp.arange(block_k)
+
+    def block_p(qi, ki, qblk, kblk, lse_q):
+        s = _gqa_scores(qblk, kblk) * scale  # (B,K,G,bq,bk)
+        abs_q = qi * block_q + q_pos
+        abs_k = ki * block_k + k_pos
+        mask = abs_k[None, :] <= abs_q[:, None]
+        if window:
+            mask &= (abs_q[:, None] - abs_k[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        return jnp.exp(s - lse_q[..., None])  # exact probs (rowsum==l)
+
+    # ---- dq pass: map over q blocks, scan kv blocks ----
+    def dq_block(args):
+        qi, qblk, dob, lse_q, D_q = args
+
+        def kv_step(dq, args2):
+            ki, kblk, vblk = args2
+            p = block_p(qi, ki, qblk, kblk, lse_q)
+            dp = jnp.einsum("bqkgp,bskp->bkgqs", dob.astype(f32),
+                            vblk.astype(f32))
+            ds = p * (dp - D_q[..., None]) * scale
+            dq = dq + jnp.einsum("bkgqs,bskp->bqkgp", ds, kblk.astype(f32))
+            return dq, None
+
+        dq0 = jnp.zeros((B, block_q, K, G, P), f32)
+        dq, _ = jax.lax.scan(kv_step, dq0, (jnp.arange(nk), kb, vb))
+        return dq
+
+    dqs = jax.lax.map(dq_block, (jnp.arange(nq), qb, doutb, lseb, Db))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq, H, P)[:, :T]
+
+    # ---- dk/dv pass: map over kv blocks, scan q blocks ----
+    def dkv_block(args):
+        ki, kblk, vblk = args
+
+        def q_step(carry, args2):
+            dk, dv = carry
+            qi, qblk, dob, lse_q, D_q = args2
+            p = block_p(qi, ki, qblk, kblk, lse_q)
+            dv = dv + jnp.einsum("bkgqs,bqkgp->bskp", p, dob.astype(f32))
+            dp = jnp.einsum("bqkgp,bskp->bkgqs", dob.astype(f32),
+                            vblk.astype(f32))
+            ds = p * (dp - D_q[..., None]) * scale
+            dk = dk + jnp.einsum("bkgqs,bqkgp->bskp", ds, qblk.astype(f32))
+            return (dk, dv), None
+
+        z = jnp.zeros((B, block_k, K, P), f32)
+        (dk, dv), _ = jax.lax.scan(q_step, (z, z),
+                                   (jnp.arange(nq), qb, doutb, lseb, Db))
+        return dk, dv
+
+    dks, dvs = jax.lax.map(dkv_block, (jnp.arange(nk), kb, vb))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Tk, K, P)[:, :T]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Tk, K, P)[:, :T]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_causal_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,157 @@
+"""CNN workloads from the paper (§V, App. A): VGG16 and ResNet18.
+
+Two artefacts per network:
+
+* ``*_conv_specs`` — the per-layer ConvSpec list (padded-input geometry)
+  used by the latency model / planner / simulator, with the paper's
+  type-1 / type-2 classification (App. A: a layer is type-1 iff
+  distributed execution can accelerate it; low compute-to-transfer layers
+  like VGG's conv1 and ResNet's 1x1 downsamples are type-2).
+* a runnable functional CNN (init/forward) whose conv layers can execute
+  through the coded pipeline — used by the end-to-end example and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+
+from ..core.coded_conv import coded_conv2d, conv2d
+from ..core.coding import MDSCode
+from ..core.splitting import ConvSpec
+
+__all__ = ["LayerInfo", "vgg16_conv_specs", "resnet18_conv_specs",
+           "is_type1", "init_small_cnn", "small_cnn_forward",
+           "small_cnn_conv_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerInfo:
+    name: str
+    spec: ConvSpec
+    type1: bool
+
+
+def is_type1(spec: ConvSpec, min_intensity: float = 200.0) -> bool:
+    """Type-1 iff compute dominates transfer enough for distribution to pay.
+
+    Intensity = subtask FLOPs per transferred byte at k=1; the threshold is
+    calibrated so VGG16's conv1 (C_I=3) and ResNet18's 1x1 downsample convs
+    come out type-2, matching App. A.
+    """
+    flops = spec.subtask_flops(spec.w_out)
+    bytes_ = spec.recv_bytes(spec.w_in) + spec.send_bytes(spec.w_out)
+    return flops / bytes_ > min_intensity
+
+
+def _spec(c_in, c_out, size, kernel=3, stride=1, pad=1) -> ConvSpec:
+    return ConvSpec(c_in=c_in, c_out=c_out, h_in=size + 2 * pad,
+                    w_in=size + 2 * pad, kernel=kernel, stride=stride)
+
+
+def vgg16_conv_specs(image: int = 224) -> List[LayerInfo]:
+    cfg = [  # (name, c_in, c_out, spatial)
+        ("conv1_1", 3, 64, image), ("conv1_2", 64, 64, image),
+        ("conv2_1", 64, 128, image // 2), ("conv2_2", 128, 128, image // 2),
+        ("conv3_1", 128, 256, image // 4), ("conv3_2", 256, 256, image // 4),
+        ("conv3_3", 256, 256, image // 4),
+        ("conv4_1", 256, 512, image // 8), ("conv4_2", 512, 512, image // 8),
+        ("conv4_3", 512, 512, image // 8),
+        ("conv5_1", 512, 512, image // 16), ("conv5_2", 512, 512, image // 16),
+        ("conv5_3", 512, 512, image // 16),
+    ]
+    out = []
+    for name, ci, co, s in cfg:
+        spec = _spec(ci, co, s)
+        out.append(LayerInfo(name, spec, is_type1(spec)))
+    return out
+
+
+def resnet18_conv_specs(image: int = 224) -> List[LayerInfo]:
+    out: List[LayerInfo] = []
+
+    def add(name, ci, co, size, kernel=3, stride=1, pad=1):
+        spec = ConvSpec(c_in=ci, c_out=co, h_in=size + 2 * pad,
+                        w_in=size + 2 * pad, kernel=kernel, stride=stride)
+        out.append(LayerInfo(name, spec, is_type1(spec)))
+
+    add("conv1", 3, 64, image, kernel=7, stride=2, pad=3)
+    s = image // 4  # after stride-2 conv + maxpool
+    for b in range(2):  # layer1: 64 -> 64
+        add(f"l1b{b}c1", 64, 64, s)
+        add(f"l1b{b}c2", 64, 64, s)
+    add("l2b0c1", 64, 128, s, stride=2)
+    add("l2ds", 64, 128, s, kernel=1, stride=2, pad=0)  # 1x1 downsample
+    s //= 2
+    add("l2b0c2", 128, 128, s)
+    add("l2b1c1", 128, 128, s)
+    add("l2b1c2", 128, 128, s)
+    add("l3b0c1", 128, 256, s, stride=2)
+    add("l3ds", 128, 256, s, kernel=1, stride=2, pad=0)
+    s //= 2
+    add("l3b0c2", 256, 256, s)
+    add("l3b1c1", 256, 256, s)
+    add("l3b1c2", 256, 256, s)
+    add("l4b0c1", 256, 512, s, stride=2)
+    add("l4ds", 256, 512, s, kernel=1, stride=2, pad=0)
+    s //= 2
+    add("l4b0c2", 512, 512, s)
+    add("l4b1c1", 512, 512, s)
+    add("l4b1c2", 512, 512, s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# runnable small CNN (end-to-end coded inference on CPU)
+# ---------------------------------------------------------------------------
+
+_SMALL = [  # (c_in, c_out, stride) — VGG-ish, image 32
+    (3, 32, 1), (32, 32, 1), (32, 64, 2), (64, 64, 1),
+]
+
+
+def small_cnn_conv_specs(image: int = 32) -> List[ConvSpec]:
+    specs, s = [], image
+    for ci, co, st in _SMALL:
+        specs.append(ConvSpec(c_in=ci, c_out=co, h_in=s + 2, w_in=s + 2,
+                              kernel=3, stride=st))
+        s = s // st
+    return specs
+
+
+def init_small_cnn(key: jax.Array, n_classes: int = 10, image: int = 32) -> dict:
+    ks = jax.random.split(key, len(_SMALL) + 1)
+    convs = []
+    for i, (ci, co, st) in enumerate(_SMALL):
+        w = jax.random.normal(ks[i], (co, ci, 3, 3), jnp.float32)
+        convs.append(w * (2.0 / (ci * 9)) ** 0.5)
+    s = image
+    for _, _, st in _SMALL:
+        s //= st
+    feat = _SMALL[-1][1] * s * s
+    head = jax.random.normal(ks[-1], (feat, n_classes), jnp.float32) * feat ** -0.5
+    return {"convs": convs, "head": head}
+
+
+def small_cnn_forward(
+    params: dict,
+    x: jax.Array,
+    code: MDSCode | None = None,
+    subset=None,
+) -> jax.Array:
+    """Forward pass; if ``code`` is given, every type-1 conv runs through the
+    coded distributed pipeline (master-side functional form)."""
+    for w, (ci, co, st) in zip(params["convs"], _SMALL):
+        xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+        spec = ConvSpec(c_in=ci, c_out=co, h_in=xp.shape[2], w_in=xp.shape[3],
+                        kernel=3, stride=st)
+        if code is not None and is_type1(spec, min_intensity=10.0):
+            sub = subset if subset is not None else list(range(code.k))
+            x = coded_conv2d(xp, w, code, spec, sub)
+        else:
+            x = conv2d(xp, w, st)
+        x = jax.nn.relu(x)
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["head"]

@@ -1,0 +1,51 @@
+"""Shared model primitives: norms, RoPE, initialisers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope", "rope_at", "he_init", "lecun_init"]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in f32, cast back to input dtype."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def _rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """positions: (...,) int -> cos/sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """Rotary embedding. x: (B, T, H, P); positions: (T,) or (B, T)."""
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)
+    # broadcast to (B, T, 1, half)
+    while cos.ndim < x.ndim - 1:
+        cos, sin = cos[None], sin[None]
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_at(x: jax.Array, pos: jax.Array, theta: float = 1e4) -> jax.Array:
+    """RoPE for one decode step. x: (B, 1, H, P); pos: scalar int."""
+    return rope(x, jnp.asarray(pos)[None], theta)
+
+
+def he_init(key, shape, dtype=jnp.bfloat16, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape, jnp.float32) * (2.0 / fan_in) ** 0.5).astype(dtype)
+
+
+def lecun_init(key, shape, dtype=jnp.bfloat16, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape, jnp.float32) * (1.0 / fan_in) ** 0.5).astype(dtype)

@@ -1,0 +1,27 @@
+"""Modality frontend stubs (the brief's one sanctioned carve-out).
+
+The audio (EnCodec/mel+conv) and vision (InternViT) encoders are NOT
+implemented; ``input_specs()`` for the [audio]/[vlm] architectures provides
+precomputed frame/patch embeddings of the right shape, and these helpers
+generate deterministic synthetic embeddings for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["synthetic_frames", "synthetic_patches"]
+
+
+def synthetic_frames(key: jax.Array, batch: int, frames: int, d_model: int,
+                     dtype=jnp.bfloat16) -> jax.Array:
+    """Stand-in for EnCodec frame embeddings: (B, T, D)."""
+    return (jax.random.normal(key, (batch, frames, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def synthetic_patches(key: jax.Array, batch: int, patches: int, d_model: int,
+                      dtype=jnp.bfloat16) -> jax.Array:
+    """Stand-in for InternViT patch embeddings after the projector: (B, T, D)."""
+    return (jax.random.normal(key, (batch, patches, d_model), jnp.float32)
+            * 0.02).astype(dtype)

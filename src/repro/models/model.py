@@ -1,0 +1,610 @@
+"""Unified decoder model covering all assigned architecture families.
+
+One functional model with a per-layer ``block_kind`` pattern:
+
+* ``attn``  — pre-norm GQA/MQA attention (+ optional qk_norm, sliding
+              window) followed by a dense (optionally gated) FFN.
+* ``moe``   — attention followed by a top-k routed mixture-of-experts FFN
+              (sort-based dispatch with capacity, expert-parallel friendly).
+* ``mamba`` — Mamba2 SSD block (models/ssm.py).
+
+Hybrid architectures (zamba2) interleave ``mamba`` blocks with a *shared*
+attention block applied every ``shared_attn_period`` layers (single weight
+set, Zamba2-style).  Audio/VLM architectures take precomputed frame/patch
+embeddings instead of token ids (frontend stub per the brief).
+
+All functions are pure; params are nested dicts so pjit partitioning rules
+(launch/sharding.py) can address them by path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (blockwise_causal_attention, decode_attention,
+                        flash_causal_attention)
+from .common import lecun_init, rms_norm, rope, rope_at
+from .ssm import (
+    SSMDims,
+    MambaState,
+    init_mamba_params,
+    init_mamba_state,
+    mamba_forward,
+    mamba_step,
+)
+
+__all__ = ["ModelConfig", "init_params", "forward", "prefill", "decode_step", "init_cache", "param_count"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None          # defaults to d_model // n_heads
+    act: str = "silu"                    # "silu" | "geglu" (gated GELU) | "gelu"
+    gated: bool = True
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    block: str = "attn"                  # "attn" | "mamba"
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    # hybrid (zamba2): shared attention block every `period` mamba layers
+    shared_attn_period: int = 0
+    # attention variant
+    sliding_window: int = 0              # 0 = full causal
+    # modality frontend ("none" | "audio" | "vision") — stub embeddings
+    frontend: str = "none"
+    dtype: Any = jnp.bfloat16
+    # attention block sizes (perf levers, see EXPERIMENTS.md §Perf)
+    block_q: int = 512
+    block_k: int = 512
+    ssm_chunk: int = 128
+    # CoCoI coded execution of the type-1 GEMMs (FFN projections):
+    # (coded_n, coded_k) > 0 routes every dense-FFN matmul through the
+    # (n, k)-MDS coded pipeline — first-class integration of the paper's
+    # technique (DESIGN.md §4).
+    coded_n: int = 0
+    coded_k: int = 0
+    # rematerialise each layer's activations in the backward pass
+    remat: bool = False
+    # metrics/debug: force python-loop layer execution and unrolled
+    # attention blocks so XLA cost_analysis (which does not descend into
+    # while bodies) sees every op.  Used by the dry-run extrapolation.
+    unstacked_exec: bool = False
+    attn_unroll: bool = False
+    # flash-attention custom VJP: recompute scores in the backward pass
+    # instead of saving O(T^2) probabilities (beyond-paper §Perf lever)
+    flash_vjp: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the vocab dim shards
+        evenly on the model axis (production-framework standard).  Logits
+        for padding rows are masked to -inf in ``forward``/``decode_step``."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def stacked(self) -> bool:
+        """Homogeneous layer stacks are stored stacked (leading L dim) and
+        executed with lax.scan — ~n_layers-times smaller HLO and compile
+        time.  Hybrid archs (shared attention interleave) keep per-layer
+        lists."""
+        return self.shared_attn_period == 0 and not self.unstacked_exec
+
+    @property
+    def ssm_dims(self) -> SSMDims:
+        return SSMDims(self.d_model, self.ssm_state, self.ssm_expand,
+                       self.ssm_head_dim, self.ssm_conv)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def layer_kind(self, i: int) -> str:
+        if self.block == "mamba":
+            return "mamba"
+        return "moe" if self.is_moe else "attn"
+
+    def has_shared_attn(self, i: int) -> bool:
+        p = self.shared_attn_period
+        return p > 0 and (i % p == p - 1)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    D, H, K, P = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        "wq": lecun_init(ks[0], (D, H, P), cfg.dtype, fan_in=D),
+        "wk": lecun_init(ks[1], (D, K, P), cfg.dtype, fan_in=D),
+        "wv": lecun_init(ks[2], (D, K, P), cfg.dtype, fan_in=D),
+        "wo": lecun_init(ks[3], (H, P, D), cfg.dtype, fan_in=H * P),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((P,), jnp.float32)
+        p["k_norm"] = jnp.zeros((P,), jnp.float32)
+    return p
+
+
+def _init_ffn(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    D, F = cfg.d_model, cfg.d_ff
+    p = {"w_in": lecun_init(ks[0], (D, F), cfg.dtype, fan_in=D),
+         "w_out": lecun_init(ks[1], (F, D), cfg.dtype, fan_in=F)}
+    if cfg.gated:
+        p["w_gate"] = lecun_init(ks[2], (D, F), cfg.dtype, fan_in=D)
+    return p
+
+
+def _init_moe(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": lecun_init(ks[0], (D, E), jnp.float32, fan_in=D),
+        "w_in": lecun_init(ks[1], (E, D, F), cfg.dtype, fan_in=D),
+        "w_gate": lecun_init(ks[2], (E, D, F), cfg.dtype, fan_in=D),
+        "w_out": lecun_init(ks[3], (E, F, D), cfg.dtype, fan_in=F),
+    }
+
+
+def _init_layer(cfg: ModelConfig, kind: str, key: jax.Array) -> dict:
+    lk = jax.random.split(key, 4)
+    if kind == "mamba":
+        return {"norm": jnp.zeros((cfg.d_model,), jnp.float32),
+                "mamba": init_mamba_params(lk[0], cfg.ssm_dims, cfg.dtype)}
+    layer = {
+        "attn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": _init_attn(lk[0], cfg),
+        "ffn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    layer["moe" if kind == "moe" else "ffn"] = (
+        _init_moe(lk[1], cfg) if kind == "moe" else _init_ffn(lk[1], cfg)
+    )
+    return layer
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    if cfg.stacked:
+        kind = cfg.layer_kind(0)
+        layers = jax.vmap(lambda k: _init_layer(cfg, kind, k))(
+            keys[: cfg.n_layers])
+    else:
+        layers = [_init_layer(cfg, cfg.layer_kind(i), keys[i])
+                  for i in range(cfg.n_layers)]
+    params = {
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "embed": lecun_init(keys[-1], (cfg.padded_vocab, cfg.d_model),
+                            cfg.dtype, fan_in=cfg.d_model),
+    }
+    if cfg.shared_attn_period:
+        params["shared_attn"] = {
+            "attn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "attn": _init_attn(keys[-2], cfg),
+            "ffn_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "ffn": _init_ffn(keys[-3], dataclasses.replace(
+                cfg, d_ff=cfg.d_ff or 4 * cfg.d_model)),
+        }
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _act(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.act == "geglu" or cfg.act == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+def _matmul(cfg: ModelConfig, x: jax.Array, w: jax.Array) -> jax.Array:
+    """Type-1 GEMM; coded (n, k)-MDS execution when configured."""
+    shape = x.shape
+    tokens = 1
+    for d in shape[:-1]:
+        tokens *= d
+    if cfg.coded_n and tokens >= cfg.coded_k:
+        from ..core.coded_linear import coded_matmul
+        from ..core.coding import MDSCode
+
+        code = MDSCode(cfg.coded_n, cfg.coded_k)
+        flat = x.reshape(-1, shape[-1]).astype(jnp.float32)
+        y = coded_matmul(flat, w.astype(jnp.float32), code,
+                         list(range(code.k)))
+        return y.reshape(*shape[:-1], w.shape[-1]).astype(x.dtype)
+    # tiny subtasks run on the master (paper footnote 2) — plain GEMM
+    return x @ w
+
+
+def _ffn(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    h = _matmul(cfg, x, p["w_in"])
+    if cfg.gated:
+        h = _act(cfg, _matmul(cfg, x, p["w_gate"])) * h
+    else:
+        h = _act(cfg, h)
+    return _matmul(cfg, h, p["w_out"])
+
+
+def _moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Top-k routed MoE with sort-based capacity dispatch.
+
+    x: (B, T, D).  Tokens are routed to top_k experts; each expert processes
+    at most C = ceil(B*T*top_k/E * capacity_factor) tokens (overflow drops,
+    standard in capacity-based MoE).  Gather/scatter keeps compute at
+    E * C * D * F instead of dense all-experts dispatch.
+    """
+    Bsz, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    flat = x.reshape(-1, D)
+    Tt = flat.shape[0]
+    logits = (flat.astype(jnp.float32) @ p["router"])  # (Tt, E)
+    gates, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), K)  # (Tt, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    C = math.ceil(Tt * K / E * cfg.capacity_factor)
+    # position of each (token, slot) within its expert
+    eid = idx.reshape(-1)                      # (Tt*K,)
+    onehot = jax.nn.one_hot(eid, E, dtype=jnp.int32)     # (Tt*K, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot       # exclusive prefix count
+    pos = jnp.take_along_axis(pos_in_e, eid[:, None], axis=1)[:, 0]  # (Tt*K,)
+    keep = pos < C
+    buf = jnp.zeros((E, C, D), x.dtype)
+    src = jnp.repeat(flat, K, axis=0)          # token for each slot
+    buf = buf.at[jnp.where(keep, eid, 0), jnp.where(keep, pos, 0)].add(
+        jnp.where(keep[:, None], src, 0).astype(x.dtype))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    g = _act(cfg, jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    out_e = jnp.einsum("ecf,efd->ecd", g * h, p["w_out"])  # (E, C, D)
+
+    gathered = out_e[jnp.where(keep, eid, 0), jnp.where(keep, pos, 0)]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    combined = (gathered.reshape(Tt, K, D).astype(jnp.float32)
+                * gates[..., None]).sum(axis=1)
+    return combined.astype(x.dtype).reshape(Bsz, T, D)
+
+
+def _attn_full(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+               window: int) -> jax.Array:
+    B, T, D = x.shape
+    q = jnp.einsum("btd,dhp->bthp", x, p["wq"])
+    k = jnp.einsum("btd,dkp->btkp", x, p["wk"])
+    v = jnp.einsum("btd,dkp->btkp", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cfg.flash_vjp:
+        o = flash_causal_attention(q, k, v, window, cfg.block_q, cfg.block_k)
+    else:
+        o = blockwise_causal_attention(q, k, v, window=window,
+                                       block_q=cfg.block_q,
+                                       block_k=cfg.block_k,
+                                       unroll=cfg.attn_unroll)
+    return jnp.einsum("bthp,hpd->btd", o, p["wo"])
+
+
+def _attn_block_full(cfg: ModelConfig, layer: dict, x: jax.Array,
+                     positions: jax.Array, window: int,
+                     ffn_key: str) -> jax.Array:
+    h = x + _attn_full(cfg, layer["attn"], rms_norm(x, layer["attn_norm"]),
+                       positions, window)
+    y = rms_norm(h, layer["ffn_norm"])
+    if ffn_key == "moe":
+        return h + _moe_ffn(cfg, layer["moe"], y)
+    return h + _ffn(cfg, layer["ffn"], y)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+def _embed_in(cfg: ModelConfig, params: dict, tokens=None, embeds=None):
+    if embeds is not None:
+        return embeds.astype(cfg.dtype)
+    scale = jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    return params["embed"][tokens] * scale
+
+
+def _lm_head(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    """Tied-embedding LM head; padding vocab rows are masked to -inf."""
+    logits = jnp.einsum("...d,vd->...v", x, params["embed"]).astype(jnp.float32)
+    if cfg.padded_vocab > cfg.vocab:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array | None = None,
+            embeds: jax.Array | None = None, window: int | None = None) -> jax.Array:
+    """Full-sequence causal LM forward. Returns logits (B, T, V_padded)."""
+    x = _embed_in(cfg, params, tokens, embeds)
+    B, T, _ = x.shape
+    positions = jnp.arange(T)
+    win = cfg.sliding_window if window is None else window
+
+    def mamba_layer(layer, x):
+        y, _ = mamba_forward(layer["mamba"], rms_norm(x, layer["norm"]),
+                             cfg.ssm_dims, cfg.ssm_chunk)
+        return x + y
+
+    def attn_layer_moe(layer, x):
+        return _attn_block_full(cfg, layer, x, positions, win, "moe")
+
+    def attn_layer_ffn(layer, x):
+        return _attn_block_full(cfg, layer, x, positions, win, "ffn")
+
+    if cfg.remat:
+        mamba_layer = jax.checkpoint(mamba_layer)
+        attn_layer_moe = jax.checkpoint(attn_layer_moe)
+        attn_layer_ffn = jax.checkpoint(attn_layer_ffn)
+
+    if cfg.stacked:
+        kind = cfg.layer_kind(0)
+        block = {"mamba": mamba_layer, "moe": attn_layer_moe,
+                 "attn": attn_layer_ffn}[kind]
+
+        def body(x, layer):
+            return block(layer, x), None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        for i, layer in enumerate(params["layers"]):
+            kind = cfg.layer_kind(i)
+            if kind == "mamba":
+                x = mamba_layer(layer, x)
+                if cfg.has_shared_attn(i):
+                    x = attn_layer_ffn(params["shared_attn"], x)
+            else:
+                x = (attn_layer_moe if kind == "moe" else attn_layer_ffn)(layer, x)
+    x = rms_norm(x, params["final_norm"])
+    return _lm_head(cfg, params, x)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _kv(cfg: ModelConfig, batch: int, S: int, lead: tuple = ()) -> dict:
+    K, P = cfg.n_kv_heads, cfg.hd
+    return {"k": jnp.zeros(lead + (batch, S, K, P), cfg.dtype),
+            "v": jnp.zeros(lead + (batch, S, K, P), cfg.dtype)}
+
+
+def _mamba_cache(cfg: ModelConfig, batch: int, lead: tuple = ()) -> dict:
+    d = cfg.ssm_dims
+    return {
+        "conv": jnp.zeros(lead + (batch, d.conv_dim, d.conv_width - 1), cfg.dtype),
+        "ssm": jnp.zeros(lead + (batch, d.n_heads, d.head_dim, d.d_state),
+                         jnp.float32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """KV ring caches (window-capped) / Mamba states + position.
+
+    Stacked archs store caches with a leading layer dim (scan-friendly);
+    hybrid archs keep a per-layer list.
+    """
+    S = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    if cfg.stacked:
+        L = (cfg.n_layers,)
+        if cfg.layer_kind(0) == "mamba":
+            layers = {"mamba": _mamba_cache(cfg, batch, L)}
+        else:
+            layers = {"kv": _kv(cfg, batch, S, L)}
+        return {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+    layers = []
+    for i in range(cfg.n_layers):
+        if cfg.layer_kind(i) == "mamba":
+            entry = {"mamba": _mamba_cache(cfg, batch)}
+            if cfg.has_shared_attn(i):
+                entry["shared_kv"] = _kv(cfg, batch, S)
+            layers.append(entry)
+        else:
+            layers.append({"kv": _kv(cfg, batch, S)})
+    return {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _attn_decode(cfg: ModelConfig, p: dict, x: jax.Array, kv: dict,
+                 pos: jax.Array) -> tuple[jax.Array, dict]:
+    B = x.shape[0]
+    q = jnp.einsum("btd,dhp->bthp", x, p["wq"])
+    k = jnp.einsum("btd,dkp->btkp", x, p["wk"])
+    v = jnp.einsum("btd,dkp->btkp", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope_at(q, pos, cfg.rope_theta)
+    k = rope_at(k, pos, cfg.rope_theta)
+    S = kv["k"].shape[1]
+    slot = pos % S
+    k_cache = jax.lax.dynamic_update_slice_in_dim(kv["k"], k, slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(kv["v"], v, slot, 1)
+    o = decode_attention(q, k_cache, v_cache, pos)
+    out = jnp.einsum("bthp,hpd->btd", o, p["wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _attn_block_decode(cfg, layer, x, kv, pos, ffn_key):
+    a, kv = _attn_decode(cfg, layer["attn"], rms_norm(x, layer["attn_norm"]),
+                         kv, pos)
+    h = x + a
+    y = rms_norm(h, layer["ffn_norm"])
+    if ffn_key == "moe":
+        return h + _moe_ffn(cfg, layer["moe"], y), kv
+    return h + _ffn(cfg, layer["ffn"], y), kv
+
+
+def _mamba_block_decode(cfg, layer, x, entry, pos):
+    state = MambaState(conv=entry["mamba"]["conv"], ssm=entry["mamba"]["ssm"])
+    y, st = mamba_step(layer["mamba"], rms_norm(x, layer["norm"]), state,
+                       cfg.ssm_dims)
+    return x + y, {"mamba": {"conv": st.conv, "ssm": st.ssm}}
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                token: jax.Array | None = None,
+                embed: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """One serving step: next-token logits given a populated cache.
+
+    token: (B, 1) int32 or embed: (B, 1, D).  Returns (logits (B, 1, V),
+    updated cache).
+    """
+    x = _embed_in(cfg, params, token, embed)
+    pos = cache["pos"]
+    if cfg.stacked:
+        kind = cfg.layer_kind(0)
+
+        def body(x, xs):
+            layer, entry = xs
+            if kind == "mamba":
+                x, new = _mamba_block_decode(cfg, layer, x, entry, pos)
+            else:
+                x, kv = _attn_block_decode(cfg, layer, x, entry["kv"], pos,
+                                           "moe" if kind == "moe" else "ffn")
+                new = {"kv": kv}
+            return x, new
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"],
+                                               cache["layers"]))
+    else:
+        new_layers = []
+        for i, layer in enumerate(params["layers"]):
+            entry = dict(cache["layers"][i])
+            if cfg.layer_kind(i) == "mamba":
+                x, st = _mamba_block_decode(cfg, layer, x, entry, pos)
+                entry.update(st)
+                if cfg.has_shared_attn(i):
+                    x, entry["shared_kv"] = _attn_block_decode(
+                        cfg, params["shared_attn"], x, entry["shared_kv"],
+                        pos, "ffn")
+            else:
+                x, entry["kv"] = _attn_block_decode(
+                    cfg, layer, x, entry["kv"], pos,
+                    "moe" if cfg.layer_kind(i) == "moe" else "ffn")
+            new_layers.append(entry)
+    x = rms_norm(x, params["final_norm"])
+    logits = _lm_head(cfg, params, x)
+    return logits, {"layers": new_layers, "pos": pos + 1}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array | None = None,
+            embeds: jax.Array | None = None,
+            max_seq: int | None = None) -> tuple[jax.Array, dict]:
+    """Process a full prompt, returning (last-position logits, cache).
+
+    ``max_seq`` sizes the KV ring cache (prompt + planned generation);
+    sliding-window archs cap it at the window.
+    """
+    x = _embed_in(cfg, params, tokens, embeds)
+    B, T, _ = x.shape
+    positions = jnp.arange(T)
+    max_seq = max_seq or T
+    S = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    win = cfg.sliding_window
+
+    def mamba_pf(layer, x):
+        y, st = mamba_forward(layer["mamba"], rms_norm(x, layer["norm"]),
+                              cfg.ssm_dims, cfg.ssm_chunk)
+        return x + y, {"mamba": {"conv": st.conv, "ssm": st.ssm}}
+
+    if cfg.stacked:
+        kind = cfg.layer_kind(0)
+
+        def body(x, layer):
+            if kind == "mamba":
+                return mamba_pf(layer, x)
+            x, kv = _prefill_attn(cfg, layer, x, positions, win, S,
+                                  "moe" if kind == "moe" else "ffn")
+            return x, {"kv": kv}
+
+        x, layers = jax.lax.scan(body, x, params["layers"])
+    else:
+        layers = []
+        for i, layer in enumerate(params["layers"]):
+            entry = {}
+            if cfg.layer_kind(i) == "mamba":
+                x, st = mamba_pf(layer, x)
+                entry.update(st)
+                if cfg.has_shared_attn(i):
+                    x, skv = _prefill_attn(cfg, params["shared_attn"], x,
+                                           positions, win, S, "ffn")
+                    entry["shared_kv"] = skv
+            else:
+                kind = cfg.layer_kind(i)
+                x, kv = _prefill_attn(cfg, layer, x, positions, win, S,
+                                      "moe" if kind == "moe" else "ffn")
+                entry["kv"] = kv
+            layers.append(entry)
+    x = rms_norm(x, params["final_norm"])
+    logits = _lm_head(cfg, params, x[:, -1])
+    cache = {"layers": layers, "pos": jnp.asarray(T, jnp.int32)}
+    return logits[:, None], cache
+
+
+def _prefill_attn(cfg, layer, x, positions, win, S, ffn_key):
+    """Attention block over the full prompt that also emits the ring cache."""
+    p = layer["attn"]
+    xin = rms_norm(x, layer["attn_norm"])
+    q = jnp.einsum("btd,dhp->bthp", xin, p["wq"])
+    k = jnp.einsum("btd,dkp->btkp", xin, p["wk"])
+    v = jnp.einsum("btd,dkp->btkp", xin, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cfg.flash_vjp:
+        o = flash_causal_attention(q, k, v, win, cfg.block_q, cfg.block_k)
+    else:
+        o = blockwise_causal_attention(q, k, v, window=win,
+                                       block_q=cfg.block_q,
+                                       block_k=cfg.block_k,
+                                       unroll=cfg.attn_unroll)
+    h = x + jnp.einsum("bthp,hpd->btd", o, p["wo"])
+    y = rms_norm(h, layer["ffn_norm"])
+    if ffn_key == "moe":
+        out = h + _moe_ffn(cfg, layer["moe"], y)
+    else:
+        out = h + _ffn(cfg, layer["ffn"], y)
+    # ring cache: the last min(S, T) positions, placed so that slot = pos % S
+    T = k.shape[1]
+    if S >= T:
+        pad = ((0, 0), (0, S - T), (0, 0), (0, 0))
+        tail_k, tail_v = jnp.pad(k, pad), jnp.pad(v, pad)
+    else:
+        roll = (T - S) % S
+        tail_k = jnp.roll(k[:, -S:], shift=roll, axis=1)
+        tail_v = jnp.roll(v[:, -S:], shift=roll, axis=1)
+    return out, {"k": tail_k, "v": tail_v}

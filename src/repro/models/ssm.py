@@ -1,0 +1,254 @@
+"""Mamba2 SSD (state-space duality) block — chunked scan + O(1) decode.
+
+Implements the SSD algorithm of Mamba2 [arXiv:2405.21060] with G=1
+(B/C shared across heads):
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t           (per head, state N)
+    y_t = C_t . h_t + D x_t
+
+Full sequences use the chunked dual form (intra-chunk quadratic term +
+inter-chunk state recurrence) so the materialised state tensor is
+(B, n_chunks, H, P, N) instead of (B, T, H, P, N).  Decode is a single
+recurrence step on a carried (B, H, P, N) state — this is why the SSM
+architectures run the long_500k shape natively.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import rms_norm, lecun_init
+
+__all__ = ["SSMDims", "init_mamba_params", "mamba_forward", "mamba_step", "init_mamba_state", "ssd_chunked", "ssd_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_state: int           # N
+    expand: int = 2
+    head_dim: int = 64     # P
+    conv_width: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state  # x, B, C go through the conv
+
+    @property
+    def in_proj_dim(self) -> int:
+        # z, x, B, C, dt
+        return 2 * self.d_inner + 2 * self.d_state + self.n_heads
+
+
+def init_mamba_params(key, dims: SSMDims, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 4)
+    H = dims.n_heads
+    return {
+        "in_proj": lecun_init(ks[0], (dims.d_model, dims.in_proj_dim), dtype),
+        "conv_w": lecun_init(ks[1], (dims.conv_dim, dims.conv_width), dtype,
+                             fan_in=dims.conv_width),
+        "conv_b": jnp.zeros((dims.conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 1e-2, jnp.float32))),
+        "gate_norm": jnp.zeros((dims.d_inner,), jnp.float32),
+        "out_proj": lecun_init(ks[2], (dims.d_inner, dims.d_model), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., L) -> cumulative segment sums M[..., l, s] = sum_{s<j<=l} dA_j,
+    -inf for s > l (strictly causal within a chunk)."""
+    L = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    M = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, M, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B, T, H, P)
+    dt: jax.Array,     # (B, T, H) positive
+    A: jax.Array,      # (H,) negative
+    Bm: jax.Array,     # (B, T, N)
+    Cm: jax.Array,     # (B, T, N)
+    chunk: int = 128,
+    init_state: jax.Array | None = None,  # (B, H, P, N)
+):
+    """Returns (y: (B, T, H, P), final_state: (B, H, P, N)). f32 internals."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, T)
+    T_pad = -T % chunk  # pad with dt=0 steps: no state/output contribution
+    f32 = jnp.float32
+    x_, dt_, Bm_, Cm_ = (a.astype(f32) for a in (x, dt, Bm, Cm))
+    if T_pad:
+        pad3 = ((0, 0), (0, T_pad), (0, 0))
+        x_ = jnp.pad(x_, pad3 + ((0, 0),))
+        dt_, Bm_, Cm_ = (jnp.pad(a, pad3) for a in (dt_, Bm_, Cm_))
+    T_full = T + T_pad
+    c = T_full // chunk
+    dA = dt_ * A.astype(f32)[None, None, :]  # (B, T, H)
+
+    xr = x_.reshape(Bsz, c, chunk, H, P)
+    dtr = dt_.reshape(Bsz, c, chunk, H)
+    dAr = dA.reshape(Bsz, c, chunk, H)
+    Br = Bm_.reshape(Bsz, c, chunk, N)
+    Cr = Cm_.reshape(Bsz, c, chunk, N)
+
+    # --- intra-chunk (quadratic, attention-like) ---
+    Lmat = jnp.exp(_segsum(dAr.transpose(0, 1, 3, 2)))  # (B, c, H, L, L)
+    CB = jnp.einsum("bcln,bcsn->bcls", Cr, Br)          # (B, c, L, L)
+    y_intra = jnp.einsum("bchls,bcls,bcsh,bcshp->bclhp", Lmat, CB, dtr, xr)
+
+    # --- chunk boundary states ---
+    cum = jnp.cumsum(dAr, axis=2)                        # (B, c, L, H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B, c, L, H)
+    S = jnp.einsum("bcsn,bcsh,bcsh,bcshp->bchpn", Br, decay_to_end, dtr, xr)
+
+    # --- inter-chunk recurrence over c ---
+    total = jnp.exp(cum[:, :, -1, :])                    # (B, c, H) chunk decay
+
+    def step(h, args):
+        tot_c, S_c = args  # (B, H), (B, H, P, N)
+        h_next = h * tot_c[..., None, None] + S_c
+        return h_next, h  # emit the state *entering* this chunk
+
+    h0 = (init_state.astype(f32) if init_state is not None
+          else jnp.zeros((Bsz, H, P, N), f32))
+    final_state, prev_states = jax.lax.scan(
+        step, h0, (total.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4))
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (B, c, H, P, N)
+
+    # --- inter-chunk contribution ---
+    in_decay = jnp.exp(cum)                               # decay from chunk start
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", Cr, in_decay, prev_states)
+
+    y = (y_intra + y_inter).reshape(Bsz, T_full, H, P)[:, :T]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_step(
+    state: jax.Array,  # (B, H, P, N) f32
+    x: jax.Array,      # (B, H, P)
+    dt: jax.Array,     # (B, H)
+    A: jax.Array,      # (H,)
+    Bm: jax.Array,     # (B, N)
+    Cm: jax.Array,     # (B, N)
+):
+    """One recurrence step. Returns (y: (B, H, P), new_state)."""
+    f32 = jnp.float32
+    x_, dt_, Bm_, Cm_ = (a.astype(f32) for a in (x, dt, Bm, Cm))
+    decay = jnp.exp(dt_ * A.astype(f32)[None, :])  # (B, H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt_, Bm_, x_)
+    new_state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm_, new_state)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, conv_dim, conv_width-1) recent conv inputs
+    ssm: jax.Array   # (B, H, P, N) f32
+
+
+def init_mamba_state(dims: SSMDims, batch: int, dtype=jnp.bfloat16) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, dims.conv_dim, dims.conv_width - 1), dtype),
+        ssm=jnp.zeros((batch, dims.n_heads, dims.head_dim, dims.d_state), jnp.float32),
+    )
+
+
+def _split_in_proj(zxbcdt: jax.Array, dims: SSMDims):
+    di, N, H = dims.d_inner, dims.d_state, dims.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + dims.conv_dim]
+    dt_raw = zxbcdt[..., di + dims.conv_dim :]
+    assert dt_raw.shape[-1] == H
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. xbc: (B, T, C); w: (C, W)."""
+    Bsz, T, C = xbc.shape
+    W = w.shape[-1]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    # depthwise: feature_group_count = C; kernel (W, 1, C) in ('NWC','WIO','NWC')
+    out = jax.lax.conv_general_dilated(
+        pad, w.T[:, None, :], (1,), "VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=C,
+    )
+    return out + b.astype(out.dtype)
+
+
+def mamba_forward(params: dict, x: jax.Array, dims: SSMDims, chunk: int = 128):
+    """Full-sequence Mamba2 block. x: (B, T, D) -> (B, T, D), final MambaState."""
+    Bsz, T, _ = x.shape
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt_raw = _split_in_proj(zxbcdt, dims)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    di, N = dims.d_inner, dims.d_state
+    xs = xbc[..., :di].reshape(Bsz, T, dims.n_heads, dims.head_dim)
+    Bm = xbc[..., di : di + N]
+    Cm = xbc[..., di + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None])
+    A = -jnp.exp(params["A_log"])
+    y, final_ssm = ssd_chunked(xs, dt, A, Bm, Cm, chunk=chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(Bsz, T, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["gate_norm"])
+    out = y @ params["out_proj"]
+    # conv state: last W-1 *pre-conv* inputs
+    zxbcdt_tail = (x[:, -(dims.conv_width - 1):] @ params["in_proj"])
+    _, xbc_tail, _ = _split_in_proj(zxbcdt_tail, dims)
+    state = MambaState(conv=xbc_tail.transpose(0, 2, 1), ssm=final_ssm)
+    return out, state
+
+
+def mamba_step(params: dict, x: jax.Array, state: MambaState, dims: SSMDims):
+    """One-token step. x: (B, 1, D) -> (B, 1, D), new state."""
+    Bsz = x.shape[0]
+    zxbcdt = x[:, 0] @ params["in_proj"]  # (B, in_proj_dim)
+    z, xbc_new, dt_raw = _split_in_proj(zxbcdt, dims)
+    # causal conv over [conv_state, new]: take the last output position
+    hist = jnp.concatenate([state.conv, xbc_new[..., None]], axis=-1)  # (B, C, W)
+    conv_out = jnp.einsum("bcw,cw->bc", hist.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    conv_out = conv_out.astype(x.dtype)
+    di, N = dims.d_inner, dims.d_state
+    xs = conv_out[..., :di].reshape(Bsz, dims.n_heads, dims.head_dim)
+    Bm = conv_out[..., di : di + N]
+    Cm = conv_out[..., di + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None])
+    A = -jnp.exp(params["A_log"])
+    y, new_ssm = ssd_step(state.ssm, xs, dt, A, Bm, Cm)
+    y = y + params["D"].astype(y.dtype)[None, :, None] * xs
+    y = y.reshape(Bsz, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["gate_norm"])
+    out = (y @ params["out_proj"])[:, None]
+    new_state = MambaState(conv=hist[..., 1:], ssm=new_ssm)
+    return out, new_state

@@ -1,0 +1,3 @@
+from .engine import Engine, Request, Completion
+
+__all__ = ["Engine", "Request", "Completion"]

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests (brief deliverable f).
+
+For each of the 10 assigned architectures: instantiate the REDUCED
+same-family variant (2 layers, d_model<=512, <=4 experts) and run one
+forward/train step on CPU asserting output shapes + no NaNs, plus one
+decode step against a small cache.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.launch.steps import cross_entropy, make_train_step
+from repro.models import decode_step, forward, init_params, prefill
+from repro.models.model import init_cache
+from repro.optim import adamw_init
+
+B, T = 2, 16
+
+
+def _batch(cfg, key):
+    if cfg.frontend != "none":
+        embeds = jax.random.normal(key, (B, T, cfg.d_model), jnp.float32) * 0.05
+        labels = jax.random.randint(key, (B, T), 0, cfg.vocab)
+        return {"embeds": embeds.astype(cfg.dtype), "labels": labels}
+    toks = jax.random.randint(key, (B, T + 1), 0, cfg.vocab)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_brief(arch):
+    """The full config reproduces the assigned table exactly."""
+    cfg = get_config(arch)
+    table = {
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "mamba2-2.7b": (64, 2560, 1, 1, 0, 50280),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+    }
+    L, D, H, K, F, V = table[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab) == (L, D, H, K, F, V)
+    extras = {
+        "gemma-2b": lambda c: c.head_dim == 256 and c.act == "geglu",
+        "zamba2-1.2b": lambda c: c.ssm_state == 64 and c.shared_attn_period > 0,
+        "mamba2-2.7b": lambda c: c.ssm_state == 128 and c.block == "mamba",
+        "dbrx-132b": lambda c: c.n_experts == 16 and c.top_k == 4,
+        "qwen3-32b": lambda c: c.qk_norm,
+        "kimi-k2-1t-a32b": lambda c: c.n_experts == 384 and c.top_k == 8,
+        "musicgen-medium": lambda c: c.frontend == "audio",
+        "internvl2-1b": lambda c: c.frontend == "vision",
+    }
+    if arch in extras:
+        assert extras[arch](cfg), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = smoke_config(arch)
+    assert cfg.n_layers == 2 and cfg.d_model <= 512
+    if cfg.is_moe:
+        assert cfg.n_experts <= 4
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits = forward(cfg, params, tokens=batch.get("tokens"),
+                     embeds=batch.get("embeds"))
+    assert logits.shape == (B, T, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits[..., : cfg.vocab]).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    step_fn = jax.jit(make_train_step(cfg))
+    new_params, new_opt, loss = step_fn(params, opt, batch, jnp.zeros((), jnp.int32))
+    assert bool(jnp.isfinite(loss))
+    assert float(loss) > 0
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, x: a + float(jnp.sum(jnp.abs(x[0].astype(jnp.float32)
+                                               - x[1].astype(jnp.float32)))),
+        jax.tree.map(lambda a, b: (a, b), new_params, params), 0.0)
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    """ONE new token against a populated cache (the decode shapes' step)."""
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_cache(cfg, B, max_seq=T)
+    if cfg.frontend != "none":
+        e = jax.random.normal(jax.random.PRNGKey(2), (B, 1, cfg.d_model),
+                              jnp.float32).astype(cfg.dtype)
+        logits, cache2 = decode_step(cfg, params, cache, embed=e)
+    else:
+        tok = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0, cfg.vocab)
+        logits, cache2 = decode_step(cfg, params, cache, token=tok)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits[..., : cfg.vocab]).all())
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "zamba2-1.2b", "mamba2-2.7b",
+                                  "dbrx-132b", "qwen3-32b"])
+def test_smoke_prefill_decode_consistency(arch):
+    """prefill+decode == full forward on the reduced variant."""
+    cfg = smoke_config(arch)
+    if cfg.is_moe:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=4.0)  # no drops
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+    lgp, cache = prefill(cfg, params, toks, max_seq=T + 4)
+    nxt = jnp.argmax(lgp, -1).astype(jnp.int32)
+    lgd, _ = decode_step(cfg, params, cache, token=nxt)
+    full = forward(cfg, params, jnp.concatenate([toks, nxt], 1))
+    v = cfg.vocab
+    scale = float(jnp.max(jnp.abs(full[:, -1, :v]))) + 1e-9
+    err = float(jnp.max(jnp.abs(lgd[:, 0, :v] - full[:, -1, :v]))) / scale
+    assert err < 2e-2, err

@@ -1,0 +1,118 @@
+"""Coding-scheme tests: MDS any-k decodability (the paper's core invariant),
+replication coverage, LT rank/decoding."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coding import (
+    LTCode,
+    MDSCode,
+    ReplicationCode,
+    robust_soliton,
+    vandermonde_generator,
+)
+
+
+class TestVandermonde:
+    def test_shape(self):
+        G = vandermonde_generator(7, 3)
+        assert G.shape == (7, 3)
+
+    @pytest.mark.parametrize("n,k", [(4, 2), (10, 6), (16, 12), (16, 16)])
+    def test_every_k_submatrix_invertible(self, n, k):
+        """The MDS property (eq. 3): every k-row submatrix is invertible."""
+        G = vandermonde_generator(n, k)
+        rng = np.random.default_rng(0)
+        subsets = list(itertools.combinations(range(n), k))
+        if len(subsets) > 50:
+            subsets = [tuple(sorted(rng.choice(n, k, replace=False)))
+                       for _ in range(50)]
+        for S in subsets:
+            assert np.linalg.matrix_rank(G[list(S)]) == k
+
+    def test_chebyshev_better_conditioned_than_integer(self):
+        """DESIGN.md §5: the node change is justified by conditioning."""
+        n, k = 16, 12
+        Gc = vandermonde_generator(n, k, "chebyshev")
+        Gi = vandermonde_generator(n, k, "integer")
+        S = list(range(k))
+        assert np.linalg.cond(Gc[S]) < np.linalg.cond(Gi[S]) / 1e3
+
+
+class TestMDSCode:
+    @given(st.integers(2, 12), st.data())
+    @settings(max_examples=30, deadline=None)
+    def test_any_k_subset_decodes(self, n, data):
+        """PROPERTY: decode(S, encode(X)) == X for EVERY k-subset S."""
+        k = data.draw(st.integers(1, n))
+        code = MDSCode(n, k)
+        rng = np.random.default_rng(n * 100 + k)
+        X = jnp.asarray(rng.standard_normal((k, 37)), jnp.float32)
+        coded = code.encode(X)
+        subset = sorted(rng.choice(n, size=k, replace=False).tolist())
+        dec = code.decode_from(subset, coded[jnp.asarray(subset)])
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(X),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_rejects_bad_k(self):
+        with pytest.raises(ValueError):
+            MDSCode(4, 5)
+        with pytest.raises(ValueError):
+            MDSCode(4, 0)
+
+    def test_encode_flops_eq8(self):
+        code = MDSCode(10, 4)
+        assert code.encode_flops(100) == 2 * 4 * 10 * 100
+
+    def test_decode_flops_eq12(self):
+        code = MDSCode(10, 4)
+        assert code.decode_flops(100) == 2 * 16 * 100
+
+    def test_duplicate_subset_rejected(self):
+        code = MDSCode(5, 3)
+        with pytest.raises(ValueError):
+            code.decode_matrix([0, 0, 1])
+
+
+class TestReplication:
+    @given(st.integers(2, 16))
+    @settings(max_examples=16, deadline=None)
+    def test_roundtrip_when_covered(self, n):
+        code = ReplicationCode(n)
+        rng = np.random.default_rng(n)
+        X = jnp.asarray(rng.standard_normal((code.k, 11)), jnp.float32)
+        coded = code.encode(X)
+        # one full copy: first k workers
+        subset = list(range(code.k))
+        assert code.decodable(subset)
+        np.testing.assert_allclose(np.asarray(code.decode_from(subset, coded)),
+                                   np.asarray(X))
+
+    def test_not_decodable_when_uncovered(self):
+        code = ReplicationCode(6)  # k=3; workers 0 and 3 hold the same subtask
+        assert not code.decodable([0, 3, 1])
+
+
+class TestLT:
+    def test_robust_soliton_is_distribution(self):
+        for k in (1, 2, 5, 30):
+            d = robust_soliton(k)
+            assert d.shape == (k,)
+            assert abs(d.sum() - 1.0) < 1e-9
+            assert (d >= 0).all()
+
+    def test_lt_decodes_with_overhead(self):
+        k = 8
+        code = LTCode(k)
+        rng = np.random.default_rng(0)
+        X = jnp.asarray(rng.standard_normal((k, 13)), jnp.float32)
+        rows = code.sample_encoding_matrix(4 * k, seed=7)
+        assert code.decodable(rows, k)
+        coded = code.encode_with(rows, X)
+        dec = code.decode_from(rows, coded)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(X),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,80 @@
+"""Latency model tests: Definition 1, eqs. 8-12, order statistics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency import (
+    ShiftExp,
+    SystemParams,
+    exp_order_stat_mean,
+    harmonic,
+    phase_sizes,
+)
+from repro.core.splitting import ConvSpec
+
+
+class TestShiftExp:
+    def test_mean(self):
+        d = ShiftExp(mu=2.0, theta=0.5).scaled(10.0)
+        # E[T] = N(theta + 1/mu) = 10 * (0.5 + 0.5) = 10
+        assert abs(d.mean() - 10.0) < 1e-12
+
+    def test_support_starts_at_shift(self, rng):
+        d = ShiftExp(mu=1.0, theta=0.3).scaled(5.0)
+        s = d.sample(rng, (20000,))
+        assert (s >= d.shift).all()
+        assert abs(s.mean() - d.mean()) < 0.1
+
+    def test_cdf_matches_definition_1(self):
+        d = ShiftExp(mu=3.0, theta=0.1).scaled(7.0)
+        t = np.linspace(0, 10, 100)
+        expect = np.where(t >= 0.7, 1 - np.exp(-(3.0 / 7.0) * (t - 0.7)), 0.0)
+        np.testing.assert_allclose(d.cdf(t), expect, atol=1e-12)
+
+    def test_empirical_cdf_fit(self, rng):
+        """App. B style: samples drawn from the model match its own CDF."""
+        d = ShiftExp(mu=1.5, theta=0.2).scaled(3.0)
+        s = np.sort(d.sample(rng, (50_000,)))
+        emp = np.arange(1, s.size + 1) / s.size
+        assert np.max(np.abs(emp - d.cdf(s))) < 0.01  # KS distance
+
+
+class TestOrderStats:
+    @given(n=st.integers(1, 30), rate=st.floats(0.1, 10.0))
+    @settings(max_examples=30, deadline=None)
+    def test_kth_mean_formula(self, n, rate):
+        """E[T_(k)] = (H_n - H_{n-k})/rate, exact for exponentials."""
+        rng = np.random.default_rng(42)
+        x = rng.exponential(1.0 / rate, size=(40_000, n))
+        x.sort(axis=1)
+        for k in {1, n // 2 or 1, n}:
+            got = x[:, k - 1].mean()
+            want = exp_order_stat_mean(n, k, rate)
+            assert abs(got - want) < 6 * want / np.sqrt(40_000) + 0.02 / rate
+
+    def test_harmonic(self):
+        assert harmonic(0) == 0.0
+        assert abs(harmonic(3) - (1 + 0.5 + 1 / 3)) < 1e-12
+
+
+class TestPhaseSizes:
+    def test_eqs_8_to_12(self):
+        """Check against hand-computed values of eqs. (8)-(12)."""
+        spec = ConvSpec(c_in=3, c_out=8, h_in=10, w_in=10, kernel=3, stride=1,
+                        batch=1)
+        n, k = 4, 2
+        s = phase_sizes(spec, n, k)
+        w_o = (10 - 3) // 1 + 1  # 8
+        w_o_p = w_o // k  # 4
+        w_i_p = 3 + (w_o_p - 1) * 1  # 6
+        h_o = 8
+        assert s.n_enc == 2 * k * n * (1 * 3 * 10 * w_i_p)      # eq. (8)
+        assert s.n_cmp == 1 * 8 * h_o * w_o_p * 2 * 3 * 9       # eq. (9)
+        assert s.n_rec == 4 * 1 * 3 * 10 * w_i_p                # eq. (10)
+        assert s.n_sen == 4 * 1 * 8 * h_o * w_o_p               # eq. (11)
+        assert s.n_dec == 2 * k * k * (1 * 8 * h_o * w_o_p)     # eq. (12)
+
+    def test_workload_decreases_with_k(self):
+        spec = ConvSpec(c_in=16, c_out=16, h_in=30, w_in=30, kernel=3)
+        sizes = [phase_sizes(spec, 12, k).n_cmp for k in (1, 2, 4, 8)]
+        assert sizes == sorted(sizes, reverse=True)

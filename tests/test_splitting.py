@@ -1,0 +1,62 @@
+"""Splitting geometry tests (eqs. 1-2 + footnote 2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.splitting import ConvSpec, plan_token_split, plan_width_split
+
+
+@given(
+    c=st.integers(1, 64),
+    h=st.integers(3, 64),
+    w_out=st.integers(4, 120),
+    kernel=st.sampled_from([1, 3, 5, 7]),
+    stride=st.sampled_from([1, 2]),
+    k=st.integers(1, 16),
+)
+@settings(max_examples=200, deadline=None)
+def test_width_split_properties(c, h, w_out, kernel, stride, k):
+    """PROPERTIES of the output-driven split (eqs. 1-2):
+    equal output widths, input width satisfies eq. (1), ranges satisfy
+    eq. (2), full output coverage including the master remainder."""
+    w_in = kernel + (w_out - 1) * stride  # exact geometry
+    spec = ConvSpec(c_in=c, c_out=c, h_in=h, w_in=w_in, kernel=kernel,
+                    stride=stride)
+    assert spec.w_out == w_out
+    k = min(k, w_out)
+    plan = plan_width_split(spec, k)
+    w_o_p = w_out // k
+    for p in plan.parts:
+        assert p.w_out == w_o_p
+        assert p.w_in == kernel + (w_o_p - 1) * stride          # eq. (1)
+        assert p.a_i == p.a_o * stride                          # eq. (2)
+        assert p.b_i == (p.b_o - 1) * stride + kernel           # eq. (2)
+        assert 0 <= p.a_i < p.b_i <= w_in
+    # coverage: outputs tile [0, w_out)
+    covered = []
+    for p in plan.parts:
+        covered.extend(range(p.a_o, p.b_o))
+    if plan.remainder is not None:
+        covered.extend(range(plan.remainder.a_o, plan.remainder.b_o))
+    assert covered == list(range(w_out))
+    # remainder only when w_out % k
+    assert (plan.remainder is None) == (w_out % k == 0)
+
+
+def test_rejects_k_too_large():
+    spec = ConvSpec(c_in=1, c_out=1, h_in=5, w_in=5, kernel=3, stride=1)
+    with pytest.raises(ValueError):
+        plan_width_split(spec, spec.w_out + 1)
+
+
+@given(t=st.integers(1, 300), k=st.integers(1, 32))
+@settings(max_examples=100, deadline=None)
+def test_token_split(t, k):
+    k = min(k, t)
+    plan = plan_token_split(t, k)
+    covered = []
+    for p in plan.parts:
+        assert p.w_in == p.w_out  # degenerate K=S=1: no halo
+        covered.extend(range(p.a_o, p.b_o))
+    if plan.remainder is not None:
+        covered.extend(range(plan.remainder.a_o, plan.remainder.b_o))
+    assert covered == list(range(t))

@@ -1,0 +1,163 @@
+"""End-to-end system tests: coded CNN inference, the serving engine's
+coded mode, the training loop, and checkpointing."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import MDSCode, SimScenario, SystemParams, k_circ
+from repro.core.runtime import simulate_network
+from repro.models import init_small_cnn, small_cnn_forward
+from repro.models.cnn import vgg16_conv_specs
+from repro.serving import Engine, Request
+from repro.configs import smoke_config
+
+
+class TestCodedCNNInference:
+    def test_end_to_end_exact(self):
+        """Every type-1 conv routed through the coded pipeline -> same
+        logits (the paper's inference-quality-unchanged claim)."""
+        params = init_small_cnn(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 32, 32),
+                              jnp.float32)
+        ref = small_cnn_forward(params, x)
+        for subset in ([0, 1, 2, 3], [2, 3, 4, 5]):
+            out = small_cnn_forward(params, x, code=MDSCode(6, 4),
+                                    subset=subset)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=1e-3, atol=1e-3)
+
+    def test_vgg16_failure_scenario_wins(self):
+        """Network-level: CoCoI beats uncoded under failures on VGG16."""
+        sysp = SystemParams(mu_m=2.5e9, theta_m=4e-10, mu_cmp=4e9,
+                            theta_cmp=1.35e-9, mu_rec=1.5e7, theta_rec=3e-7,
+                            mu_sen=1.5e7, theta_sen=3e-7)
+        specs = [li.spec for li in vgg16_conv_specs() if li.type1]
+        ks = [min(k_circ(s, 10, sysp), 8) for s in specs]
+        sc = SimScenario(n_fail=1)
+        coded = simulate_network(specs, 10, sysp, "coded", ks=ks, scenario=sc,
+                                 trials=8).mean()
+        unc = simulate_network(specs, 10, sysp, "uncoded", scenario=sc,
+                               trials=8).mean()
+        assert coded < unc
+
+
+class TestServingEngine:
+    def test_coded_mode_identical_generations(self):
+        cfg = smoke_config("internvl2-1b")
+        import dataclasses
+        cfg = dataclasses.replace(cfg, frontend="none")  # token-driven
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 12,
+                                                   dtype=np.int32),
+                        max_new=4) for i in range(3)]
+        plain = Engine(cfg, seed=0)
+        coded = Engine(cfg, params=plain.params, coded=(6, 4))
+        a = plain.generate(reqs)
+        b = coded.generate(reqs)
+        assert all((x.tokens == y.tokens).all() for x, y in zip(a, b))
+
+    def test_mixed_length_bucketing(self):
+        cfg = smoke_config("musicgen-medium")
+        import dataclasses
+        cfg = dataclasses.replace(cfg, frontend="none")
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=0, prompt=rng.integers(0, cfg.vocab, 8,
+                                                   dtype=np.int32), max_new=3),
+                Request(rid=1, prompt=rng.integers(0, cfg.vocab, 16,
+                                                   dtype=np.int32), max_new=3)]
+        outs = Engine(cfg).generate(reqs)
+        assert [c.rid for c in outs] == [0, 1]
+        assert all(len(c.tokens) == 3 for c in outs)
+
+
+class TestTraining:
+    def test_loss_improves(self):
+        from repro.launch.train import train_loop
+        cfg = smoke_config("gemma-2b")
+        _, losses = train_loop(cfg, steps=12, batch=2, seq=32, log_every=100)
+        assert losses[-1] < losses[0]
+        assert all(np.isfinite(losses))
+
+    def test_checkpoint_roundtrip(self, tmp_path):
+        from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+        from repro.models import init_params
+        cfg = smoke_config("internvl2-1b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        save_checkpoint(str(tmp_path), 7, {"params": params})
+        assert latest_step(str(tmp_path)) == 7
+        loaded = load_checkpoint(str(tmp_path), 7, {"params": params})
+        flat_a = jax.tree.leaves(params)
+        flat_b = jax.tree.leaves(loaded["params"])
+        for a, b in zip(flat_a, flat_b):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_wsd_schedule_shape(self):
+        from repro.optim import wsd_schedule
+        lr = wsd_schedule(1e-3, warmup=10, stable=80, decay=10)
+        assert float(lr(0)) == 0.0
+        assert abs(float(lr(10)) - 1e-3) < 1e-9
+        assert abs(float(lr(50)) - 1e-3) < 1e-9   # stable plateau
+        assert float(lr(100)) < 2e-4 + 1e-9        # decayed to floor
+
+
+class TestMicrobatching:
+    def test_accumulated_grads_match_full_batch(self):
+        """microbatches=M gives the same update as the full batch (up to
+        f32 accumulation order)."""
+        import jax
+        import jax.numpy as jnp
+        from repro.launch.steps import make_train_step
+        from repro.models import init_params
+        from repro.optim import adamw_init
+
+        cfg = smoke_config("gemma-2b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 17), 0, cfg.vocab)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        step = jnp.zeros((), jnp.int32)
+        p1, _, l1 = jax.jit(make_train_step(cfg))(params, opt, batch, step)
+        p4, _, l4 = jax.jit(make_train_step(cfg, microbatches=4))(
+            params, opt, batch, step)
+        assert abs(float(l1) - float(l4)) < 5e-3
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=5e-2, atol=5e-3)
+
+
+class TestHeterogeneousExtension:
+    """BEYOND-PAPER: the paper's stated future direction — subtask
+    allocation across heterogeneous workers (conclusion, §VI)."""
+
+    def test_proportional_allocation(self):
+        from repro.core.hetero import allocate_pieces
+        assert allocate_pieces([1, 1, 1, 1], 8) == [2, 2, 2, 2]
+        alloc = allocate_pieces([3, 1, 1, 1], 12)
+        assert sum(alloc) == 12
+        assert alloc[0] > alloc[1]
+
+    def test_speed_aware_beats_uniform(self):
+        """Giving fast workers more coded pieces beats uniform assignment
+        on a fleet with one 4x-slower straggler."""
+        import dataclasses
+        from repro.core.hetero import allocate_pieces, simulate_hetero, worker_speed
+        from repro.core.splitting import ConvSpec
+
+        spec = ConvSpec(c_in=64, c_out=64, h_in=28, w_in=32, kernel=3)
+        fast = SystemParams(mu_cmp=2e9, theta_cmp=8e-10, mu_rec=4e7,
+                            theta_rec=8e-8, mu_sen=4e7, theta_sen=8e-8)
+        slow = dataclasses.replace(fast, theta_cmp=3.2e-9, mu_cmp=5e8)
+        fleet = [slow] + [fast] * 7
+        k, n_pieces = 8, 12
+        speeds = [worker_speed(p) for p in fleet]
+        smart = allocate_pieces(speeds, n_pieces)
+        uniform = allocate_pieces([1.0] * len(fleet), n_pieces)
+        rng1, rng2 = np.random.default_rng(0), np.random.default_rng(0)
+        t_smart = np.mean([simulate_hetero(spec, k, smart, fleet, rng1)
+                           for _ in range(300)])
+        t_unif = np.mean([simulate_hetero(spec, k, uniform, fleet, rng2)
+                          for _ in range(300)])
+        assert t_smart < t_unif, (t_smart, t_unif)
