@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.core.latency import SystemParams
 from repro.core.planner import k_circ, k_star
-from repro.core.runtime import SimScenario, simulate_layer
+from repro.core.runtime import SimScenario, simulate_layer_batch, simulate_network
 from repro.models.cnn import resnet18_conv_specs, vgg16_conv_specs
 
 # Paper-testbed-scale parameters (Raspberry Pi 4B + 100 Mbps WiFi, App. B):
@@ -42,21 +42,15 @@ def type1_layers(net: str):
 def network_latency(net: str, method: str, scenario=SimScenario(),
                     params=PAPER_PARAMS, ks=None, trials=20, seed=0,
                     n=N_WORKERS) -> np.ndarray:
-    """Total type-1 latency per trial for a CNN under one method."""
-    layers = type1_layers(net)
-    rng = np.random.default_rng(seed)
-    out = np.zeros(trials)
-    for t in range(trials):
-        tot = 0.0
-        for i, li in enumerate(layers):
-            k = ks[i] if ks is not None else None
-            sc = scenario
-            if method == "lt" and scenario.lt_k is None:
-                import dataclasses
-                sc = dataclasses.replace(scenario, lt_k=min(n, li.spec.w_out))
-            tot += simulate_layer(li.spec, n, params, method, k, sc, rng)
-        out[t] = tot
-    return out
+    """Total type-1 latency per trial for a CNN under one method.
+
+    One vectorized (trials,) batch per layer (runtime.simulate_network) —
+    the seed's Python trial x layer loop is gone; see BENCH_sim_vectorize.json.
+    LT's per-layer lt_k defaulting happens inside LTScheme.sim_plan.
+    """
+    specs = [li.spec for li in type1_layers(net)]
+    return simulate_network(specs, n, params, method, ks, scenario,
+                            trials=trials, seed=seed)
 
 
 def plan_ks(net: str, params=PAPER_PARAMS, n=N_WORKERS, how="circ",
@@ -83,9 +77,9 @@ def plan_ks(net: str, params=PAPER_PARAMS, n=N_WORKERS, how="circ",
             best, best_v = 1, np.inf
             rng = np.random.default_rng(1)
             for k in range(1, min(n, li.spec.w_out) + 1):
-                v = np.mean([simulate_layer(li.spec, n, params, "coded", k,
-                                            scenario, rng)
-                             for _ in range(samples // 20)])
+                v = simulate_layer_batch(li.spec, n, params, "coded", k,
+                                         scenario, rng,
+                                         trials=samples // 20).mean()
                 if v < best_v:
                     best, best_v = k, v
             ks.append(best)

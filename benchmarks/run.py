@@ -18,6 +18,7 @@ def main() -> None:
         fig10_param_impact,
         kernels_micro,
         roofline,
+        sim_speedup,
         table1_k_approx,
     )
 
@@ -34,6 +35,7 @@ def main() -> None:
         ("ext_hetero", ext_hetero.run),
         ("kernels", kernels_micro.run),
         ("roofline", roofline.run),
+        ("sim_speedup", sim_speedup.run),
     ]
     for name, fn in benches:
         if only and only != name:

@@ -10,6 +10,16 @@ Public API:
     runtime     — master/worker straggler & failure simulation (§V)
 """
 from .coding import MDSCode, ReplicationCode, LTCode
+from .schemes import (
+    CodingScheme,
+    LTScheme,
+    MDSScheme,
+    ReplicationScheme,
+    UncodedScheme,
+    get_scheme,
+    register_scheme,
+    scheme_names,
+)
 from .splitting import ConvSpec, SplitPlan, plan_width_split, plan_token_split
 from .coded_conv import conv2d, coded_conv2d, coded_conv2d_sharded
 from .coded_linear import coded_matmul, coded_matmul_sharded
@@ -27,10 +37,17 @@ from .planner import (
     straggling_index_R,
     plan_layer,
 )
-from .runtime import SimScenario, simulate_layer, simulate_network
+from .runtime import (
+    SimScenario,
+    simulate_layer,
+    simulate_layer_batch,
+    simulate_network,
+)
 
 __all__ = [
     "MDSCode", "ReplicationCode", "LTCode",
+    "CodingScheme", "MDSScheme", "ReplicationScheme", "LTScheme",
+    "UncodedScheme", "get_scheme", "register_scheme", "scheme_names",
     "ConvSpec", "SplitPlan", "plan_width_split", "plan_token_split",
     "conv2d", "coded_conv2d", "coded_conv2d_sharded",
     "coded_matmul", "coded_matmul_sharded",
@@ -39,5 +56,6 @@ __all__ = [
     "expected_latency_mc",
     "uncoded_latency", "uncoded_latency_mc", "replication_latency_mc",
     "straggling_index_R", "plan_layer",
-    "SimScenario", "simulate_layer", "simulate_network",
+    "SimScenario", "simulate_layer", "simulate_layer_batch",
+    "simulate_network",
 ]

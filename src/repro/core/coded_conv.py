@@ -2,12 +2,18 @@
 
 Pipeline for one type-1 layer:
 
-    split (eqs. 1-2)  ->  MDS encode (eq. 3)  ->  n parallel conv subtasks
-    ->  any-k decode (eq. 4)  ->  width-concat (+ master remainder)
+    split (eqs. 1-2)  ->  encode (eq. 3)  ->  n parallel conv subtasks
+    ->  any-sufficient-subset decode (eq. 4)  ->  width-concat (+ remainder)
 
 Convolution is linear in its input, so f(G x) = G f(x) row-wise and the
 decode recovers the *exact* uncoded output (up to f32 roundoff of the
-Vandermonde solve) — inference quality is unchanged (§II-B.4).
+decode solve) — inference quality is unchanged (§II-B.4).
+
+The pipeline is written against the :class:`~repro.core.schemes.CodingScheme`
+protocol: any registered scheme (MDS, replication, LT, uncoded) slots in —
+``encode``/``decode_from`` are the only scheme-specific steps.  MDS and LT
+route their encode/decode GEMMs through the Pallas kernels
+(kernels/mds_encode.py, kernels/mds_decode.py).
 
 Two execution modes:
 
@@ -25,7 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .coding import MDSCode
+from ..kernels.ops import shard_map_compat
+from .schemes import CodingScheme, resolve_subset
 from .splitting import ConvSpec, SplitPlan, plan_width_split
 
 __all__ = [
@@ -49,8 +56,8 @@ def split_input(x: jax.Array, plan: SplitPlan) -> jax.Array:
     return jnp.stack([x[..., p.a_i : p.b_i] for p in plan.parts])
 
 
-def _encode_partitions(code: MDSCode, parts: jax.Array) -> jax.Array:
-    """(k, B,C,H,Wp) -> (n, B,C,H,Wp) via flatten -> G @ . -> unflatten (eq. 3)."""
+def _encode_partitions(code: CodingScheme, parts: jax.Array) -> jax.Array:
+    """(k, B,C,H,Wp) -> (n, B,C,H,Wp) via flatten -> encode -> unflatten (eq. 3)."""
     k = parts.shape[0]
     flat = parts.reshape(k, -1)
     coded = code.encode(flat)
@@ -60,17 +67,21 @@ def _encode_partitions(code: MDSCode, parts: jax.Array) -> jax.Array:
 def coded_conv2d(
     x: jax.Array,
     w: jax.Array,
-    code: MDSCode,
+    code: CodingScheme,
     spec: ConvSpec,
-    subset: Sequence[int],
+    subset: Sequence[int] | None = None,
     plan: SplitPlan | None = None,
 ) -> jax.Array:
     """Full coded pipeline; returns the exact conv output f(x).
 
-    ``subset`` is the index set S of the k fastest workers (decoding uses
-    only their outputs — the other n-k are stragglers whose results are
-    discarded, which we emulate by simply not consuming them).
+    ``code`` is any registered scheme instance (MDS, replication, LT,
+    uncoded).  ``subset`` is the index set S of the fastest workers whose
+    outputs decoding consumes — the others are stragglers whose results are
+    discarded, which we emulate by simply not consuming them.  It may hold
+    more than k indices for schemes that need extra symbols (LT); ``None``
+    means the scheme's canonical decodable subset.
     """
+    subset = resolve_subset(code, subset)
     if plan is None:
         plan = plan_width_split(spec, code.k)
     parts = split_input(x, plan)  # (k, B, C, H, W_I^p)
@@ -79,10 +90,10 @@ def coded_conv2d(
     # Execution phase: each worker i computes f(X~_i) with the same weights.
     coded_out = jax.vmap(lambda xi: conv2d(xi, w, spec.stride))(coded_in)
 
-    # Decoding phase: any k outputs suffice (eq. 4).
-    sel = coded_out[jnp.asarray(list(subset))]
-    flat = sel.reshape(code.k, -1)
-    decoded = code.decode_from(list(subset), flat)
+    # Decoding phase: any sufficient subset of outputs decodes (eq. 4).
+    sel = coded_out[jnp.asarray(subset)]
+    flat = sel.reshape(len(subset), -1)
+    decoded = code.decode_from(subset, flat)
     y_parts = decoded.reshape((code.k,) + coded_out.shape[1:])
 
     # Reassemble on the width dim; master-kept remainder (footnote 2).
@@ -97,21 +108,22 @@ def coded_conv2d(
 def coded_conv2d_sharded(
     x: jax.Array,
     w: jax.Array,
-    code: MDSCode,
+    code: CodingScheme,
     spec: ConvSpec,
     mesh: jax.sharding.Mesh,
     axis: str = "model",
 ) -> jax.Array:
     """TPU-pod form: the n coded subtasks live on the ``axis`` mesh axis.
 
-    The master-side encode/decode become einsums against the generator /
-    decode matrices; XLA partitions the per-worker conv with zero cross-
-    worker communication (each device's partition is self-contained thanks
-    to the halo split).  On real hardware the fastest-k selection is done
-    by the serving runtime (core/runtime.py); inside one SPMD program all
-    n results are produced, so we decode with S = [0..k) — numerically
-    identical output, and the compiled artifact exercises the same
-    collectives (gather over the worker axis) as a fastest-k gather.
+    The master-side encode/decode become GEMMs against the generator /
+    decode matrices (Pallas kernels for MDS/LT); XLA partitions the
+    per-worker conv with zero cross-worker communication (each device's
+    partition is self-contained thanks to the halo split).  On real
+    hardware the fastest-subset selection is done by the serving runtime
+    (core/runtime.py); inside one SPMD program all n results are produced,
+    so we decode with the scheme's canonical subset — numerically identical
+    output, and the compiled artifact exercises the same collectives
+    (gather over the worker axis) as a fastest-k gather.
     """
     n = mesh.shape[axis]
     if n != code.n:
@@ -120,7 +132,7 @@ def coded_conv2d_sharded(
     parts = split_input(x, plan)  # (k, ...)
     coded_in = _encode_partitions(code, parts)  # (n, ...)
 
-    shard_map = jax.shard_map  # jax >= 0.8
+    shard_map = shard_map_compat()
 
     @jax.jit
     def _run(coded_in, w):
@@ -137,8 +149,8 @@ def coded_conv2d_sharded(
         return out
 
     coded_out = _run(coded_in, w)
-    subset = list(range(code.k))
-    flat = coded_out[: code.k].reshape(code.k, -1)
+    subset = code.default_subset()
+    flat = coded_out[jnp.asarray(subset)].reshape(len(subset), -1)
     decoded = code.decode_from(subset, flat)
     y_parts = decoded.reshape((code.k,) + coded_out.shape[1:])
     y = jnp.concatenate(list(y_parts), axis=-1)

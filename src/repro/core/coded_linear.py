@@ -20,13 +20,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .coding import MDSCode
+from .schemes import CodingScheme, resolve_subset
 from .splitting import SplitPlan, plan_token_split
 
 __all__ = ["coded_matmul", "coded_matmul_sharded"]
 
 
-def _encode_tokens(code: MDSCode, x: jax.Array, plan: SplitPlan) -> jax.Array:
+def _encode_tokens(code: CodingScheme, x: jax.Array, plan: SplitPlan) -> jax.Array:
     """(T, d) tokens -> (n, T_p, d) coded token slices."""
     k = code.k
     t_p = plan.w_out_p
@@ -38,20 +38,22 @@ def _encode_tokens(code: MDSCode, x: jax.Array, plan: SplitPlan) -> jax.Array:
 def coded_matmul(
     x: jax.Array,
     w: jax.Array,
-    code: MDSCode,
-    subset: Sequence[int],
+    code: CodingScheme,
+    subset: Sequence[int] | None = None,
 ) -> jax.Array:
-    """Exact Y = X @ W recovered from any k of n coded worker GEMMs.
+    """Exact Y = X @ W recovered from a decodable subset of the n coded
+    worker GEMMs, under any registered scheme.
 
     x: (T, d_in), w: (d_in, d_out).  The remainder rows (T mod k) are
     computed by the master (paper footnote 2).
     """
+    subset = resolve_subset(code, subset)
     T = x.shape[0]
     plan = plan_token_split(T, code.k)
     coded_in = _encode_tokens(code, x, plan)  # (n, T_p, d_in)
     coded_out = jnp.einsum("ntd,df->ntf", coded_in, w)  # n worker GEMMs
-    sel = coded_out[jnp.asarray(list(subset))]
-    decoded = code.decode_from(list(subset), sel.reshape(code.k, -1))
+    sel = coded_out[jnp.asarray(subset)]
+    decoded = code.decode_from(subset, sel.reshape(len(subset), -1))
     y = decoded.reshape(code.k * plan.w_out_p, w.shape[-1])
     if plan.remainder is not None:
         y = jnp.concatenate([y, x[plan.remainder.a_i :] @ w], axis=0)
@@ -61,7 +63,7 @@ def coded_matmul(
 def coded_matmul_sharded(
     x: jax.Array,
     w: jax.Array,
-    code: MDSCode,
+    code: CodingScheme,
     mesh: jax.sharding.Mesh,
     axis: str = "model",
 ) -> jax.Array:
@@ -73,7 +75,9 @@ def coded_matmul_sharded(
     plan = plan_token_split(T, code.k)
     coded_in = _encode_tokens(code, x, plan)
 
-    shard_map = jax.shard_map
+    from ..kernels.ops import shard_map_compat
+
+    shard_map = shard_map_compat()
 
     @jax.jit
     def _run(coded_in, w):
@@ -85,8 +89,9 @@ def coded_matmul_sharded(
         )(coded_in, w)
 
     coded_out = _run(coded_in, w)
-    subset = list(range(code.k))
-    decoded = code.decode_from(subset, coded_out[: code.k].reshape(code.k, -1))
+    subset = code.default_subset()
+    decoded = code.decode_from(
+        subset, coded_out[jnp.asarray(subset)].reshape(len(subset), -1))
     y = decoded.reshape(code.k * plan.w_out_p, w.shape[-1])
     if plan.remainder is not None:
         y = jnp.concatenate([y, x[plan.remainder.a_i :] @ w], axis=0)

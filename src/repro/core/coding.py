@@ -20,7 +20,7 @@ DESIGN.md §5.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import functools
 from typing import Sequence
 
 import jax
@@ -30,6 +30,7 @@ import numpy as np
 __all__ = [
     "vandermonde_nodes",
     "vandermonde_generator",
+    "decode_matrix_cached",
     "MDSCode",
     "ReplicationCode",
     "LTCode",
@@ -49,13 +50,35 @@ def vandermonde_nodes(n: int, kind: str = "chebyshev") -> np.ndarray:
     raise ValueError(f"unknown node kind: {kind}")
 
 
+@functools.lru_cache(maxsize=512)
 def vandermonde_generator(n: int, k: int, kind: str = "chebyshev") -> np.ndarray:
-    """The n x k generator G of eq. (3): G[i, j] = g_i^(k-1-j)."""
+    """The n x k generator G of eq. (3): G[i, j] = g_i^(k-1-j).
+
+    Cached: every (spec, n, k) phase-size evaluation and every encode touches
+    the same handful of generators.  The returned array is shared — callers
+    must not mutate it.
+    """
     if not 1 <= k <= n:
         raise ValueError(f"need 1 <= k <= n, got n={n} k={k}")
     g = vandermonde_nodes(n, kind)
     powers = np.arange(k - 1, -1, -1)  # k-1, k-2, ..., 0
-    return np.power.outer(g, powers)  # (n, k)
+    G = np.power.outer(g, powers)  # (n, k)
+    G.setflags(write=False)
+    return G
+
+
+@functools.lru_cache(maxsize=4096)
+def decode_matrix_cached(n: int, k: int, subset: tuple, kind: str) -> np.ndarray:
+    """G_S^{-1} for the k-subset S (eq. 4), cached on (n, k, S, node kind).
+
+    Fastest-k decoding revisits a small set of subsets (the fast workers are
+    sticky), so the `np.linalg.inv` per call the seed paid is almost always
+    redundant.  DESIGN.md §2.
+    """
+    G = vandermonde_generator(n, k, kind)
+    D = np.linalg.inv(G[np.asarray(subset)])
+    D.setflags(write=False)
+    return D
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,29 +102,69 @@ class MDSCode:
     def generator(self) -> np.ndarray:
         return vandermonde_generator(self.n, self.k, self.node_kind)
 
+    @property
+    def min_done(self) -> int:
+        """Fewest worker completions that can possibly decode (any k)."""
+        return self.k
+
+    def decodable(self, subset: Sequence[int]) -> bool:
+        """MDS property: ANY k distinct in-range coded rows decode."""
+        idx = {int(i) for i in subset}
+        return all(0 <= i < self.n for i in idx) and len(idx) >= self.k
+
+    def default_subset(self) -> list[int]:
+        return list(range(self.k))
+
     # -- encode -----------------------------------------------------------
     def encode(self, sources: jax.Array) -> jax.Array:
-        """(k, F) source matrix -> (n, F) coded matrix: G @ X  (eq. 3)."""
+        """(k, F) source matrix -> (n, F) coded matrix: G @ X  (eq. 3).
+
+        Routed through the Pallas encode kernel (kernels/mds_encode.py);
+        interpret mode on CPU, compiled on TPU.
+        """
         if sources.shape[0] != self.k:
             raise ValueError(f"expected {self.k} source rows, got {sources.shape[0]}")
+        from ..kernels.ops import mds_encode
+
         G = jnp.asarray(self.generator, dtype=sources.dtype)
-        return G @ sources
+        return mds_encode(G, sources)
 
     # -- decode -----------------------------------------------------------
     def decode_matrix(self, subset: Sequence[int]) -> np.ndarray:
-        """G_S^{-1} for the k-subset S of worker indices (eq. 4)."""
-        subset = list(subset)
+        """G_S^{-1} for the k-subset S of worker indices (eq. 4), cached."""
+        subset = tuple(int(i) for i in subset)
         if len(subset) != self.k:
             raise ValueError(f"need exactly k={self.k} indices, got {len(subset)}")
         if len(set(subset)) != self.k:
             raise ValueError("subset indices must be distinct")
-        G_S = self.generator[np.asarray(subset)]
-        return np.linalg.inv(G_S)
+        return decode_matrix_cached(self.n, self.k, subset, self.node_kind)
 
     def decode_from(self, subset: Sequence[int], coded: jax.Array) -> jax.Array:
-        """Recover (k, F) sources from the k coded rows named by ``subset``."""
+        """Recover (k, F) sources from the coded rows named by ``subset``.
+
+        Any k rows suffice (eq. 4); a larger subset (the pipeline allows
+        m > k for rateless schemes) is down-selected to its first k rows.
+        The D @ Y GEMM runs through the Pallas decode kernel
+        (kernels/mds_decode.py), mirroring the encode path.
+        """
+        from ..kernels.ops import mds_decode
+
+        subset = [int(i) for i in subset]
+        if len(subset) > self.k:
+            # keep the first k DISTINCT rows (decodable() counts distinct
+            # indices, so its contract must survive the down-selection)
+            keep: list[int] = []
+            seen: set[int] = set()
+            for pos, idx in enumerate(subset):
+                if idx not in seen:
+                    seen.add(idx)
+                    keep.append(pos)
+                if len(keep) == self.k:
+                    break
+            subset = [subset[p] for p in keep]
+            coded = coded[jnp.asarray(keep)]
         D = jnp.asarray(self.decode_matrix(subset), dtype=coded.dtype)
-        return D @ coded
+        return mds_decode(D, coded)
 
     # -- latency-model scaling (eqs. 8, 12) --------------------------------
     def encode_flops(self, row_elems: int) -> int:
@@ -135,14 +198,24 @@ class ReplicationCode:
         """coded row index -> source row index."""
         return np.arange(self.n) % self.k
 
+    @property
+    def min_done(self) -> int:
+        """Best case: the first k workers cover every source row."""
+        return self.k
+
+    def default_subset(self) -> list[int]:
+        return list(range(self.k))
+
     def encode(self, sources: jax.Array) -> jax.Array:
         if sources.shape[0] != self.k:
             raise ValueError(f"expected {self.k} source rows, got {sources.shape[0]}")
         return sources[jnp.asarray(self.assignment())]
 
     def decodable(self, subset: Sequence[int]) -> bool:
-        covered = {int(i) % self.k for i in subset}
-        return len(covered) == self.k
+        idx = [int(i) for i in subset]
+        if not all(0 <= i < self.n for i in idx):
+            return False
+        return len({i % self.k for i in idx}) == self.k
 
     def decode_from(self, subset: Sequence[int], coded: jax.Array) -> jax.Array:
         """Pick one received copy of each source row."""

@@ -34,6 +34,7 @@ from .splitting import ConvSpec
 __all__ = [
     "L",
     "L_continuous",
+    "plan_k",
     "k_circ",
     "k_star",
     "expected_latency_mc",
@@ -94,6 +95,16 @@ def L_continuous(spec: ConvSpec, n: int, k: float, params: SystemParams) -> floa
     """L(k) with both the floor and the integrality of k relaxed (eq. 16)."""
     s = _sizes_continuous(spec, n, k)
     return _L_from_sizes(s, n, k, params, float(np.log(n / (n - k))))
+
+
+def plan_k(scheme: str, spec: ConvSpec, n: int, params: SystemParams) -> int:
+    """Split choice k for ANY registered scheme — delegates to the scheme's
+    own ``redundancy_policy`` (k° for MDS, floor(n/2) for replication,
+    min(n, W_O) for uncoded/LT).  The scheme-agnostic entry point the
+    serving/benchmark layers use instead of hard-coding per-method rules."""
+    from .schemes import get_scheme
+
+    return get_scheme(scheme).redundancy_policy(n, spec, params)
 
 
 def k_circ(spec: ConvSpec, n: int, params: SystemParams,

@@ -1,110 +1,176 @@
-"""Master/worker event simulation of CoCoI (paper §V scenarios).
+"""Master/worker simulation of CoCoI (paper §V scenarios) — vectorized and
+scheme-agnostic.
 
-Simulates one type-1 layer execution per trial under the four methods the
-paper compares (§V):
+The seed carried four copy-pasted per-method simulators (``_run_coded`` /
+``_run_uncoded`` / ``_run_replication`` / ``_run_lt``) and a Python
+trial x layer loop.  This rebuild keeps ONE generic driver,
+:func:`_run_scheme`, that for any registered scheme (core/schemes.py):
 
-* ``coded``        — CoCoI: (n, k)-MDS; done at the k-th worker completion.
-* ``uncoded``      — [8]: split into n, wait for all; failures re-executed.
-* ``replication``  — [15]: k = floor(n/2), each subtask on 2 workers.
-* ``lt``           — LtCoI (App. G): rateless stream; done when n_d symbols
-                     (empirical Robust-Soliton overhead) have arrived.
+1. resolves the scheme's :class:`SimPlan` (worker count, per-worker phase
+   sizes, master encode/decode/remainder sizes);
+2. samples every phase as a ``(trials, n)`` batch from the shift-exponential
+   model, applying scenario-1 channel contention (``lambda_tr``) and the
+   scenario-3 high-probability straggler ONCE;
+3. draws per-trial failure sets (scenario-2) ONCE;
+4. hands the batch to the scheme's vectorized completion rule
+   (``sim_exec``), which may invoke the shared detection/retry helpers;
+5. folds in the master's encode/decode terms and the footnote-2 remainder.
 
-Scenario knobs (§V):
-* scenario-1: extra transmission straggling — ``params.scaled_tr(1+lambda_tr)``
-  handled by the caller (mu_tr scaled down).
-* scenario-2: ``n_fail`` workers fail uniformly at random each execution.
-* scenario-3: additionally one designated high-probability straggler whose
-  compute straggling parameter is ``straggler_slow``x worse.
+``simulate_layer`` (one trial, float) and ``simulate_network`` (a whole
+(trials,) batch per layer, summed) are thin wrappers; the batch form is
+what makes fig5/fig6-sized sweeps >=10x faster than the seed's per-trial
+loop (see benchmarks/sim_speedup.py and BENCH_sim_vectorize.json).
 
-Failure semantics: a failed worker signals the master at the moment it
-would have completed (detection time); the affected subtask is then
-re-executed on a fresh device (uncoded), or simply ignored if enough
-redundancy remains (coded/replication/LT).  This mirrors §V's "if any
-worker fails, the subtask will be re-assigned ... for re-execution".
+Failure semantics (unchanged from the seed): a failed worker signals the
+master at the moment it would have completed (detection time); the affected
+subtask is then re-executed on a fresh device, or simply ignored if enough
+redundancy remains.  This mirrors §V's "if any worker fails, the subtask
+will be re-assigned ... for re-execution".
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Literal
 
 import numpy as np
 
-from .coding import LTCode
 from .latency import SystemParams, phase_sizes
-from .planner import k_circ
+from .schemes import (
+    SimBatch,
+    SimPlan,
+    SimScenario,
+    get_scheme,
+    lt_overhead_samples,
+)
 from .splitting import ConvSpec
 
-Method = Literal["coded", "uncoded", "replication", "lt"]
+Method = Literal["coded", "mds", "uncoded", "replication", "lt"]
 
-__all__ = ["SimScenario", "simulate_layer", "simulate_network", "lt_overhead_samples"]
-
-
-@dataclasses.dataclass(frozen=True)
-class SimScenario:
-    n_fail: int = 0          # scenario-2: workers failing per execution
-    straggler_slow: float = 1.0  # scenario-3: one worker's mu_cmp /= slow
-    lt_k: int | None = None  # LT source-symbol count (k_l or k_s)
-    lambda_tr: float = 0.0   # scenario-1: extra Exp(lambda_tr * T_tr_mean)
-    #                          delay added to each wireless transmission
+__all__ = [
+    "SimScenario",
+    "simulate_layer",
+    "simulate_layer_batch",
+    "simulate_network",
+    "lt_overhead_samples",
+]
 
 
-@functools.lru_cache(maxsize=64)
-def lt_overhead_samples(k: int, trials: int = 200, seed: int = 1234) -> tuple:
-    """Empirical distribution of n_d: symbols needed until rank k (App. G)."""
-    code = LTCode(k)
-    out = []
-    for t in range(trials):
-        rows = code.sample_encoding_matrix(max(4 * k, k + 32), seed=seed + t)
-        # incremental rank: find smallest prefix with full rank
-        lo, hi = k, rows.shape[0]
-        if np.linalg.matrix_rank(rows) < k:
-            out.append(hi)  # undecodable within budget; pessimistic
-            continue
-        while lo < hi:
-            mid = (lo + hi) // 2
-            if np.linalg.matrix_rank(rows[:mid]) >= k:
-                hi = mid
-            else:
-                lo = mid + 1
-        out.append(lo)
-    return tuple(out)
+# ---------------------------------------------------------------------------
+# vectorized shift-exponential sampling
+# ---------------------------------------------------------------------------
+
+def _se_batch(rng, mu: float, theta: float, N: np.ndarray, trials: int,
+              scale_mult: np.ndarray | None = None) -> np.ndarray:
+    """(trials, n) draws of N_i*theta + Exp(N_i/mu); ``scale_mult`` scales
+    the exponential part per worker (the scenario-3 straggler)."""
+    N = np.asarray(N, dtype=float)
+    scale = N / mu
+    if scale_mult is not None:
+        scale = scale * scale_mult
+    return (N * theta)[None, :] + rng.exponential(1.0, (trials, N.size)) * scale[None, :]
 
 
-def _sample_phases(spec, n, k, params, rng, slow_mask=None, lambda_tr=0.0):
-    """Per-worker rec/cmp/sen samples for one execution; (3, n).
+def _sample_worker_batch(plan: SimPlan, spec: ConvSpec, params: SystemParams,
+                         scenario: SimScenario, rng, trials: int,
+                         clean: bool = False) -> np.ndarray:
+    """(trials, n) worker round-trips rec+cmp+sen with scenario effects.
 
-    ``n`` here is the number of workers to sample (may be < k for retry
-    rounds); phase sizes depend only on the split k, so clamp the code's
-    n to keep the (unused) encode term well-defined.
-
-    ``lambda_tr`` implements scenario-1 exactly as §V describes it: an
-    ADDITIONAL exponential delay with scale lambda_tr * E[T_tr] on every
-    wireless transmission.
+    ``clean=True`` drops the scenario effects (used for retry rounds, which
+    run on fresh devices after the straggling event has passed — the seed's
+    ``SimScenario()`` retries).
     """
-    s = phase_sizes(spec, max(n, k), k)
-    rec = params.rec.scaled(s.n_rec).sample(rng, (n,))
-    cmp_ = params.cmp.scaled(s.n_cmp).sample(rng, (n,))
-    sen = params.sen.scaled(s.n_sen).sample(rng, (n,))
-    if lambda_tr > 0.0:
+    n = plan.n_rec.size
+    slow = None
+    if not clean and scenario.straggler_slow > 1.0:
+        # high-probability straggler: worker 0's mu_cmp /= slow, i.e. its
+        # exponential scale is straggler_slow x the others'
+        slow = np.ones(n)
+        slow[0] = scenario.straggler_slow
+    rec = _se_batch(rng, params.mu_rec, params.theta_rec, plan.n_rec, trials)
+    cmp_ = _se_batch(rng, params.mu_cmp, params.theta_cmp, plan.n_cmp, trials,
+                     scale_mult=slow)
+    sen = _se_batch(rng, params.mu_sen, params.theta_sen, plan.n_sen, trials)
+    if not clean and scenario.lambda_tr > 0.0:
         # §V scenario-1: the injected wireless delay models CHANNEL
         # contention — its scale is lambda_tr times the typical per-worker
         # message time of this layer, NOT the (method-dependent) partition
         # size, so every method faces the same delay distribution.
-        s_ref = phase_sizes(spec, max(n, k), min(max(n, k), spec.w_out))
+        n_full = max(plan.n, plan.k)
+        s_ref = phase_sizes(spec, n_full, min(n_full, spec.w_out))
         rec = rec + rng.exponential(
-            lambda_tr * params.rec.scaled(s_ref.n_rec).mean(), size=(n,))
+            scenario.lambda_tr * params.rec.scaled(s_ref.n_rec).mean(),
+            size=(trials, n))
         sen = sen + rng.exponential(
-            lambda_tr * params.sen.scaled(s_ref.n_sen).mean(), size=(n,))
-    if slow_mask is not None:
-        # high-probability straggler: resample its cmp with mu/straggler_slow
-        import dataclasses as _dc
+            scenario.lambda_tr * params.sen.scaled(s_ref.n_sen).mean(),
+            size=(trials, n))
+    return rec + cmp_ + sen
 
-        slow = _dc.replace(params, mu_cmp=params.mu_cmp / slow_mask[1])
-        cmp_slow = slow.cmp.scaled(s.n_cmp).sample(rng, (1,))
-        cmp_[slow_mask[0]] = cmp_slow[0]
-    return rec, cmp_, sen, s
 
+def _fail_sets(n: int, n_fail: int, rng, trials: int) -> np.ndarray:
+    """(trials, n) masks with exactly n_fail True per row, uniform subsets."""
+    mask = np.zeros((trials, n), dtype=bool)
+    if n_fail:
+        idx = rng.random((trials, n)).argsort(axis=1)[:, :n_fail]
+        np.put_along_axis(mask, idx, True, axis=1)
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# the one generic driver
+# ---------------------------------------------------------------------------
+
+def _run_scheme(
+    method: str,
+    spec: ConvSpec,
+    n: int,
+    params: SystemParams,
+    k: int | None,
+    scenario: SimScenario,
+    rng: np.random.Generator,
+    trials: int,
+) -> np.ndarray:
+    """(trials,) end-to-end latencies of one type-1 layer under ``method``."""
+    scheme = get_scheme(method)
+    plan = scheme.sim_plan(spec, n, k, params, scenario)
+
+    fail = _fail_sets(plan.n, min(scenario.n_fail, plan.n), rng, trials)
+    if plan.rateless:
+        # rateless schemes stream symbols inside sim_exec; no single
+        # round-trip matrix exists
+        tw = np.zeros((trials, plan.n))
+    else:
+        tw = _sample_worker_batch(plan, spec, params, scenario, rng, trials)
+
+    def retry_uniform(num: int, m: int) -> np.ndarray:
+        uni = SimPlan(k=plan.k, n=m, n_rec=np.full(m, plan.n_rec[0]),
+                      n_cmp=np.full(m, plan.n_cmp[0]),
+                      n_sen=np.full(m, plan.n_sen[0]))
+        return _sample_worker_batch(uni, spec, params, scenario, rng, num,
+                                    clean=True)
+
+    def retry_per_worker(num: int) -> np.ndarray:
+        return _sample_worker_batch(plan, spec, params, scenario, rng, num,
+                                    clean=True)
+
+    batch = SimBatch(tw=tw, fail=fail, rng=rng, spec=spec, params=params,
+                     scenario=scenario, retry_uniform=retry_uniform,
+                     retry_per_worker=retry_per_worker)
+    t_exec = np.asarray(scheme.sim_exec(plan, batch), dtype=float)
+
+    # footnote 2: the master computes the mod(W_O, k) remainder concurrently
+    if plan.rem_flops:
+        t_exec = np.maximum(
+            t_exec, params.cmp.scaled(plan.rem_flops).sample(rng, (trials,)))
+    total = t_exec
+    if plan.n_enc:
+        total = total + params.master.scaled(plan.n_enc).sample(rng, (trials,))
+    if plan.n_dec:
+        total = total + params.master.scaled(plan.n_dec).sample(rng, (trials,))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
 
 def simulate_layer(
     spec: ConvSpec,
@@ -117,153 +183,22 @@ def simulate_layer(
 ) -> float:
     """One trial: end-to-end latency of a single type-1 layer execution."""
     rng = rng or np.random.default_rng(0)
-
-    if method == "coded":
-        k = k if k is not None else k_circ(spec, n, params)
-        k = min(k, spec.w_out)
-        return _run_coded(spec, n, k, params, scenario, rng)
-    if method == "uncoded":
-        return _run_uncoded(spec, n, params, scenario, rng)
-    if method == "replication":
-        return _run_replication(spec, n, params, scenario, rng)
-    if method == "lt":
-        lt_k = scenario.lt_k or min(n, spec.w_out)
-        return _run_lt(spec, n, lt_k, params, scenario, rng)
-    raise ValueError(f"unknown method {method}")
+    return float(_run_scheme(method, spec, n, params, k, scenario, rng, 1)[0])
 
 
-def _fail_set(n: int, scenario: SimScenario, rng) -> np.ndarray:
-    mask = np.zeros(n, dtype=bool)
-    if scenario.n_fail:
-        mask[rng.choice(n, size=scenario.n_fail, replace=False)] = True
-    return mask
-
-
-def _slow_one(params: SystemParams, scenario: SimScenario):
-    if scenario.straggler_slow > 1.0:
-        return (0, scenario.straggler_slow)  # worker 0 is the slow one
-    return None
-
-
-def _worker_times(spec, n, k, params, scenario, rng):
-    slow = _slow_one(params, scenario)
-    rec, cmp_, sen, s = _sample_phases(spec, n, k, params, rng, slow,
-                                       scenario.lambda_tr)
-    return rec + cmp_ + sen, s
-
-
-def _master_remainder(spec, k, params, rng) -> float:
-    """Footnote 2: master computes the mod(W_O, k) remainder concurrently."""
-    rem = spec.w_out % k
-    if rem == 0:
-        return 0.0
-    return float(params.cmp.scaled(spec.subtask_flops(rem)).sample(rng))
-
-
-def _run_coded(spec, n, k, params, scenario, rng) -> float:
-    s = phase_sizes(spec, n, k)
-    t_enc = params.master.scaled(s.n_enc).sample(rng)
-    t_dec = params.master.scaled(s.n_dec).sample(rng)
-    t_rem = _master_remainder(spec, k, params, rng)
-    tw, _ = _worker_times(spec, n, k, params, scenario, rng)
-    fail = _fail_set(n, scenario, rng)
-    ok = np.sort(tw[~fail])
-    if ok.size >= k:
-        t_exec = max(ok[k - 1], t_rem)
-    else:
-        # redundancy exhausted: re-execute the shortfall after detection
-        deficit = k - ok.size
-        detect = tw[fail].max(initial=0.0)
-        retry, _ = _worker_times(spec, deficit, k, params, SimScenario(), rng)
-        t_exec = max(ok[-1] if ok.size else 0.0, detect + retry.max(), t_rem)
-    return float(t_enc + t_exec + t_dec)
-
-
-def _uneven_worker_times(spec, n, params, scenario, rng):
-    """Uncoded [8] splits the output as evenly as possible ACROSS WORKERS
-    (no master remainder): W_O % n workers get ceil(W_O/n) columns, the
-    rest floor(W_O/n)."""
-    from .latency import sizes_for_width
-
-    w_floor = spec.w_out // n
-    n_ceil = spec.w_out % n
-    widths = [w_floor + 1] * n_ceil + [w_floor] * (n - n_ceil)
-    slow = _slow_one(params, scenario)
-    times = np.zeros(n)
-    for i, w in enumerate(widths):
-        s = sizes_for_width(spec, n, n, w)
-        rec = params.rec.scaled(s.n_rec).sample(rng)
-        cmp_ = params.cmp.scaled(s.n_cmp).sample(rng)
-        sen = params.sen.scaled(s.n_sen).sample(rng)
-        if scenario.lambda_tr > 0.0:
-            s_ref = phase_sizes(spec, n, min(n, spec.w_out))
-            rec = rec + rng.exponential(
-                scenario.lambda_tr * params.rec.scaled(s_ref.n_rec).mean())
-            sen = sen + rng.exponential(
-                scenario.lambda_tr * params.sen.scaled(s_ref.n_sen).mean())
-        if slow is not None and i == slow[0]:
-            import dataclasses as _dc
-            sp = _dc.replace(params, mu_cmp=params.mu_cmp / slow[1])
-            cmp_ = sp.cmp.scaled(s.n_cmp).sample(rng)
-        times[i] = rec + cmp_ + sen
-    return times
-
-
-def _run_uncoded(spec, n, params, scenario, rng) -> float:
-    # layers with W_O < n can only be split W_O ways (late ResNet layers)
-    n = min(n, spec.w_out)
-    tw = _uneven_worker_times(spec, n, params, scenario, rng)
-    fail = _fail_set(n, scenario, rng)
-    if fail.any():
-        # failed subtasks re-executed on fresh devices after detection
-        retry = _uneven_worker_times(spec, n, params, SimScenario(), rng)
-        redone = tw[fail] + retry[fail]  # detection at would-be completion
-        return float(max(tw[~fail].max(initial=0.0), redone.max()))
-    return float(tw.max())
-
-
-def _run_replication(spec, n, params, scenario, rng) -> float:
-    k = min(max(n // 2, 1), spec.w_out)
-    tw, _ = _worker_times(spec, n, k, params, scenario, rng)
-    fail = _fail_set(n, scenario, rng)
-    tw = np.where(fail, np.inf, tw)
-    paired = tw[: 2 * k].reshape(2, k)
-    per_subtask = paired.min(axis=0)
-    if np.isinf(per_subtask).any():
-        # both replicas failed: re-execute after detection
-        detect = tw[np.isfinite(tw)].max(initial=0.0)
-        m = int(np.isinf(per_subtask).sum())
-        retry, _ = _worker_times(spec, m, k, params, SimScenario(), rng)
-        return float(max(per_subtask[np.isfinite(per_subtask)].max(initial=0.0),
-                         detect + retry.max()))
-    return float(per_subtask.max())
-
-
-def _run_lt(spec, n, lt_k, params, scenario, rng) -> float:
-    """Rateless stream: workers keep producing symbols until the master has
-    n_d of them (empirical Robust-Soliton overhead)."""
-    nd_samples = lt_overhead_samples(lt_k)
-    n_d = int(rng.choice(nd_samples))
-    s = phase_sizes(spec, n, lt_k)
-    fail = _fail_set(n, scenario, rng)
-    # cap symbols per worker generously
-    per_worker = int(np.ceil(3 * n_d / max(n - fail.sum(), 1))) + 2
-    rec = params.rec.scaled(s.n_rec).sample(rng, (n,))
-    cmp_ = params.cmp.scaled(s.n_cmp).sample(rng, (n, per_worker))
-    sen = params.sen.scaled(s.n_sen).sample(rng, (n, per_worker))
-    if scenario.lambda_tr > 0.0:
-        rec = rec + rng.exponential(
-            scenario.lambda_tr * params.rec.scaled(s.n_rec).mean(), size=(n,))
-        sen = sen + rng.exponential(
-            scenario.lambda_tr * params.sen.scaled(s.n_sen).mean(),
-            size=(n, per_worker))
-    arrive = rec[:, None] + np.cumsum(cmp_, axis=1) + sen
-    arrive[fail] = np.inf
-    flat = np.sort(arrive.ravel())
-    t_exec = flat[min(n_d - 1, flat.size - 1)]
-    t_enc = params.master.scaled(s.n_enc).sample(rng)  # symbol generation
-    t_dec = params.master.scaled(2 * lt_k ** 2 * s.n_sen / 4).sample(rng)  # GE decode
-    return float(t_enc + t_exec + t_dec)
+def simulate_layer_batch(
+    spec: ConvSpec,
+    n: int,
+    params: SystemParams,
+    method: Method = "coded",
+    k: int | None = None,
+    scenario: SimScenario = SimScenario(),
+    rng: np.random.Generator | None = None,
+    trials: int = 100,
+) -> np.ndarray:
+    """(trials,) i.i.d. latencies of one layer — the vectorized form."""
+    rng = rng or np.random.default_rng(0)
+    return _run_scheme(method, spec, n, params, k, scenario, rng, trials)
 
 
 def simulate_network(
@@ -275,19 +210,18 @@ def simulate_network(
     scenario: SimScenario = SimScenario(),
     trials: int = 20,
     seed: int = 0,
+    rng: np.random.Generator | None = None,
 ) -> np.ndarray:
     """End-to-end CNN inference latency: sum of per-layer trials.
 
-    Returns (trials,) array of total latencies over the type-1 layers.
-    Type-2 (master-local) work is negligible per the paper (App. A: conv
-    is >99% of latency) and omitted here.
+    Returns (trials,) array of total latencies over the type-1 layers,
+    sampled as one batch per layer (no Python trial loop).  Type-2
+    (master-local) work is negligible per the paper (App. A: conv is >99%
+    of latency) and omitted here.
     """
-    rng = np.random.default_rng(seed)
+    rng = rng or np.random.default_rng(seed)
     out = np.zeros(trials)
-    for t in range(trials):
-        tot = 0.0
-        for i, spec in enumerate(specs):
-            k = ks[i] if ks is not None else None
-            tot += simulate_layer(spec, n, params, method, k, scenario, rng)
-        out[t] = tot
+    for i, spec in enumerate(specs):
+        k = ks[i] if ks is not None else None
+        out += _run_scheme(method, spec, n, params, k, scenario, rng, trials)
     return out

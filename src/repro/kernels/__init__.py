@@ -6,6 +6,6 @@ chunk scan.  Each kernel: <name>.py (pl.pallas_call + BlockSpec),
 wrapped in ops.py, oracled in ref.py, swept in tests/test_kernels.py.
 Validated with interpret=True on CPU; TPU is the compilation target.
 """
-from .ops import conv2d_subtask, mds_encode, ssd_chunk
+from .ops import conv2d_subtask, mds_decode, mds_encode, ssd_chunk
 
-__all__ = ["conv2d_subtask", "mds_encode", "ssd_chunk"]
+__all__ = ["conv2d_subtask", "mds_decode", "mds_encode", "ssd_chunk"]

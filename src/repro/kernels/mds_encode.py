@@ -11,8 +11,12 @@ generator G stays resident:
   X     : (k, BLOCK_F)    streamed
   out   : (n, BLOCK_F)    streamed
 
-n and k are padded to 8 (sublane) by the wrapper in ops.py; BLOCK_F is a
-multiple of 128 (lane width).
+The decode GEMM (kernels/mds_decode.py) has the identical structure with
+D = G_S^{-1} resident, so both delegate to one shared
+``skinny_gemm_pallas``.  BLOCK_F is a multiple of 128 (lane width);
+``interpret=None`` auto-detects the backend (interpret mode everywhere
+except a real TPU, so CPU CI and TPU serving both work with no caller
+flag).
 """
 from __future__ import annotations
 
@@ -22,38 +26,49 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["mds_encode_pallas", "BLOCK_F"]
+__all__ = ["skinny_gemm_pallas", "mds_encode_pallas", "BLOCK_F"]
 
 BLOCK_F = 512
 
 
-def _encode_kernel(g_ref, x_ref, o_ref):
-    g = g_ref[...]          # (n, k)
-    x = x_ref[...]          # (k, BLOCK_F)
-    o_ref[...] = jnp.dot(g, x, preferred_element_type=jnp.float32).astype(
+def _gemm_kernel(a_ref, x_ref, o_ref):
+    a = a_ref[...]          # (m, b) — resident
+    x = x_ref[...]          # (b, BLOCK_F) — streamed
+    o_ref[...] = jnp.dot(a, x, preferred_element_type=jnp.float32).astype(
         o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
-def mds_encode_pallas(G: jax.Array, x: jax.Array, *, block_f: int = BLOCK_F,
-                      interpret: bool = True) -> jax.Array:
-    """G: (n, k), x: (k, F) -> (n, F).  F padded to block_f internally."""
-    n, k = G.shape
-    kf, F = x.shape
-    assert kf == k, (G.shape, x.shape)
+def skinny_gemm_pallas(A: jax.Array, x: jax.Array, *, block_f: int = BLOCK_F,
+                       interpret: bool | None = None) -> jax.Array:
+    """A: (m, b), x: (b, F) -> (m, F) with A resident and F streamed.
+
+    F is padded to a block_f multiple internally and sliced back.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, b = A.shape
+    bx, F = x.shape
+    assert bx == b, (A.shape, x.shape)
     pad = -F % block_f
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad)))
     Fp = F + pad
     out = pl.pallas_call(
-        _encode_kernel,
-        out_shape=jax.ShapeDtypeStruct((n, Fp), x.dtype),
+        _gemm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, Fp), x.dtype),
         grid=(Fp // block_f,),
         in_specs=[
-            pl.BlockSpec((n, k), lambda i: (0, 0)),          # G resident
-            pl.BlockSpec((k, block_f), lambda i: (0, i)),    # stream X
+            pl.BlockSpec((m, b), lambda i: (0, 0)),          # A resident
+            pl.BlockSpec((b, block_f), lambda i: (0, i)),    # stream x
         ],
-        out_specs=pl.BlockSpec((n, block_f), lambda i: (0, i)),
+        out_specs=pl.BlockSpec((m, block_f), lambda i: (0, i)),
         interpret=interpret,
-    )(G.astype(x.dtype), x)
+    )(A.astype(x.dtype), x)
     return out[:, :F]
+
+
+def mds_encode_pallas(G: jax.Array, x: jax.Array, *, block_f: int = BLOCK_F,
+                      interpret: bool | None = None) -> jax.Array:
+    """G: (n, k), x: (k, F) -> (n, F): the paper's encode GEMM (eq. 3)."""
+    return skinny_gemm_pallas(G, x, block_f=block_f, interpret=interpret)

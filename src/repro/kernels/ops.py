@@ -11,21 +11,41 @@ import jax
 import jax.numpy as jnp
 
 from .conv2d import conv2d_pallas
+from .mds_decode import mds_decode_pallas
 from .mds_encode import mds_encode_pallas
 from .ssd_scan import ssd_chunk_pallas
 
-__all__ = ["mds_encode", "conv2d_subtask", "ssd_chunk", "on_tpu"]
+__all__ = ["mds_encode", "mds_decode", "conv2d_subtask", "ssd_chunk", "on_tpu",
+           "shard_map_compat"]
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def shard_map_compat():
+    """jax.shard_map (jax >= 0.8) or its jax.experimental home (older jax)."""
+    try:
+        return jax.shard_map
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map
+
+        return shard_map
+
+
 def mds_encode(G: jax.Array, x: jax.Array, *, interpret: bool | None = None
                ) -> jax.Array:
-    """Encode k flattened partitions into n coded rows (paper eq. 3)."""
-    interp = (not on_tpu()) if interpret is None else interpret
-    return mds_encode_pallas(G, x, interpret=interp)
+    """Encode k flattened partitions into n coded rows (paper eq. 3).
+
+    ``interpret=None`` auto-detects the backend inside the kernel.
+    """
+    return mds_encode_pallas(G, x, interpret=interpret)
+
+
+def mds_decode(D: jax.Array, y: jax.Array, *, interpret: bool | None = None
+               ) -> jax.Array:
+    """Recover k source rows from received coded rows: D @ Y (paper eq. 4)."""
+    return mds_decode_pallas(D, y, interpret=interpret)
 
 
 def conv2d_subtask(x: jax.Array, w: jax.Array, stride: int = 1, *,

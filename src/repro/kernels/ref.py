@@ -4,12 +4,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["mds_encode_ref", "conv2d_ref", "ssd_chunk_ref"]
+__all__ = ["mds_encode_ref", "mds_decode_ref", "conv2d_ref", "ssd_chunk_ref"]
 
 
 def mds_encode_ref(G: jax.Array, x: jax.Array) -> jax.Array:
     """(n, k) @ (k, F) -> (n, F): the paper's encode GEMM (eq. 3)."""
     return jnp.dot(G, x, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def mds_decode_ref(D: jax.Array, y: jax.Array) -> jax.Array:
+    """(k, m) @ (m, F) -> (k, F): the any-k decode GEMM (eq. 4)."""
+    return jnp.dot(D, y, preferred_element_type=jnp.float32).astype(y.dtype)
 
 
 def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:

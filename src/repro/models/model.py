@@ -19,6 +19,7 @@ All functions are pure; params are nested dicts so pjit partitioning rules
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any
 
@@ -77,10 +78,12 @@ class ModelConfig:
     ssm_chunk: int = 128
     # CoCoI coded execution of the type-1 GEMMs (FFN projections):
     # (coded_n, coded_k) > 0 routes every dense-FFN matmul through the
-    # (n, k)-MDS coded pipeline — first-class integration of the paper's
-    # technique (DESIGN.md §4).
+    # coded pipeline under ``coded_scheme`` — any name registered in
+    # core/schemes.py ("mds", "replication", "lt", "uncoded") — first-class
+    # integration of the paper's technique (DESIGN.md §4).
     coded_n: int = 0
     coded_k: int = 0
+    coded_scheme: str = "mds"
     # rematerialise each layer's activations in the backward pass
     remat: bool = False
     # metrics/debug: force python-loop layer execution and unrolled
@@ -226,21 +229,29 @@ def _act(cfg: ModelConfig, x: jax.Array) -> jax.Array:
     return jax.nn.silu(x)
 
 
+@functools.lru_cache(maxsize=64)
+def _coded_scheme(name: str, n: int, k: int | None):
+    """Scheme instances are immutable and fully determined by (name, n, k);
+    building one (LT walks seeds doing rank probes) must not happen per GEMM."""
+    from ..core.schemes import get_scheme
+
+    return get_scheme(name).make(n, k)
+
+
 def _matmul(cfg: ModelConfig, x: jax.Array, w: jax.Array) -> jax.Array:
-    """Type-1 GEMM; coded (n, k)-MDS execution when configured."""
+    """Type-1 GEMM; coded execution under cfg.coded_scheme when configured."""
     shape = x.shape
     tokens = 1
     for d in shape[:-1]:
         tokens *= d
-    if cfg.coded_n and tokens >= cfg.coded_k:
+    if cfg.coded_n:
         from ..core.coded_linear import coded_matmul
-        from ..core.coding import MDSCode
 
-        code = MDSCode(cfg.coded_n, cfg.coded_k)
-        flat = x.reshape(-1, shape[-1]).astype(jnp.float32)
-        y = coded_matmul(flat, w.astype(jnp.float32), code,
-                         list(range(code.k)))
-        return y.reshape(*shape[:-1], w.shape[-1]).astype(x.dtype)
+        code = _coded_scheme(cfg.coded_scheme, cfg.coded_n, cfg.coded_k or None)
+        if tokens >= code.k:
+            flat = x.reshape(-1, shape[-1]).astype(jnp.float32)
+            y = coded_matmul(flat, w.astype(jnp.float32), code)
+            return y.reshape(*shape[:-1], w.shape[-1]).astype(x.dtype)
     # tiny subtasks run on the master (paper footnote 2) — plain GEMM
     return x @ w
 

@@ -3,8 +3,10 @@
 Requests are bucketed by prompt length (the functional prefill has no
 padding mask — equal-length batching keeps positions exact), prefilled
 once, then decoded greedily step by step.  ``coded`` switches the FFN
-GEMMs to CoCoI (n, k)-MDS coded execution (ModelConfig.coded_n/k), making
-straggler-tolerant inference a first-class serving mode.
+GEMMs to CoCoI (n, k) coded execution (ModelConfig.coded_n/k) under any
+scheme registered in core/schemes.py (``scheme="mds"|"replication"|"lt"|
+"uncoded"``), making straggler-tolerant inference a first-class serving
+mode.
 """
 from __future__ import annotations
 
@@ -38,9 +40,20 @@ class Completion:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params=None, *, coded: tuple | None = None,
-                 max_batch: int = 8, seed: int = 0):
+                 scheme: str | None = None, max_batch: int = 8, seed: int = 0):
+        # scheme=None means "whatever cfg.coded_scheme says" — a default of
+        # "mds" would silently clobber a config that chose another scheme
+        if scheme is not None:
+            from ..core.schemes import get_scheme
+
+            get_scheme(scheme)  # fail fast on unknown scheme names
         if coded is not None:
-            cfg = dataclasses.replace(cfg, coded_n=coded[0], coded_k=coded[1])
+            cfg = dataclasses.replace(cfg, coded_n=coded[0], coded_k=coded[1],
+                                      coded_scheme=scheme or cfg.coded_scheme)
+        elif scheme is not None and scheme != cfg.coded_scheme:
+            # cfg may already enable coding (coded_n > 0): honour the
+            # requested scheme rather than silently keeping cfg's
+            cfg = dataclasses.replace(cfg, coded_scheme=scheme)
         self.cfg = cfg
         self.params = params if params is not None else init_params(
             cfg, jax.random.PRNGKey(seed))

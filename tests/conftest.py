@@ -1,5 +1,51 @@
+"""Shared fixtures + a conftest-level fallback for optional dev deps.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt).  When it is
+absent the property-based tests must degrade to SKIPS, not collection
+errors: this shim installs a minimal stand-in module whose ``@given``
+decorator marks the test skipped, so the four property-test modules still
+collect and their non-property tests still run.
+"""
+import sys
+import types
+
 import numpy as np
 import pytest
+
+try:  # real hypothesis wins whenever it is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.__doc__ = "Minimal stub: property tests skip when hypothesis is absent."
+
+    def _given(*_a, **_kw):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (see requirements-dev.txt)")(fn)
+        return deco
+
+    def _settings(*_a, **_kw):  # @settings(...) stacking on @given
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategy:
+        """Placeholder strategy: never executed (tests are skipped)."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *a, **kw):
+            return self
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.__getattr__ = lambda name: _Strategy()  # st.integers, st.data, ...
+
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture

@@ -5,8 +5,13 @@ import numpy as np
 import pytest
 
 from repro.core.coding import vandermonde_generator
-from repro.kernels.ops import conv2d_subtask, mds_encode, ssd_chunk
-from repro.kernels.ref import conv2d_ref, mds_encode_ref, ssd_chunk_ref
+from repro.kernels.ops import conv2d_subtask, mds_decode, mds_encode, ssd_chunk
+from repro.kernels.ref import (
+    conv2d_ref,
+    mds_decode_ref,
+    mds_encode_ref,
+    ssd_chunk_ref,
+)
 
 TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
@@ -26,6 +31,36 @@ class TestMDSEncodeKernel:
         np.testing.assert_allclose(
             np.asarray(got, np.float32), np.asarray(want, np.float32),
             **TOL[dtype])
+
+
+class TestMDSDecodeKernel:
+    @pytest.mark.parametrize("n,k", [(3, 2), (10, 6), (16, 12), (16, 16)])
+    @pytest.mark.parametrize("F", [64, 512, 1000, 4097])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, n, k, F, dtype):
+        # D = G_S^{-1} for the first-k subset: the real decode matrix shape
+        G = vandermonde_generator(n, k)
+        D = jnp.asarray(np.linalg.inv(G[:k]), dtype)
+        y = (jax.random.normal(jax.random.PRNGKey(F + n), (k, F), jnp.float32)
+             .astype(dtype))
+        got = mds_decode(D, y, interpret=True)
+        want = mds_decode_ref(D, y)
+        assert got.shape == (k, F)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **TOL[dtype])
+
+    def test_encode_then_decode_roundtrip(self):
+        """Kernel pipeline = the paper's eq. 3 -> eq. 4 identity."""
+        n, k, F = 10, 6, 777
+        G = vandermonde_generator(n, k)
+        x = jax.random.normal(jax.random.PRNGKey(0), (k, F), jnp.float32)
+        coded = mds_encode(jnp.asarray(G, jnp.float32), x, interpret=True)
+        subset = [0, 2, 3, 5, 7, 9]
+        D = jnp.asarray(np.linalg.inv(G[subset]), jnp.float32)
+        back = mds_decode(D, coded[jnp.asarray(subset)], interpret=True)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                                   rtol=2e-3, atol=2e-3)
 
 
 class TestConv2dKernel:

@@ -1,0 +1,230 @@
+"""Scheme registry + protocol round-trips + vectorized-simulator regression.
+
+The round-trip test is the paper's §II-B invariant stated once for EVERY
+registered scheme: encode, drop as many workers as the redundancy allows,
+decode from the survivors, recover the sources exactly.
+
+The regression tests pin the vectorized ``simulate_layer_batch`` /
+``simulate_network`` means against (a) the per-trial loop (the seed
+simulator's shape) and (b) the planner's independent Monte-Carlo latency
+models (`expected_latency_mc` & co., untouched by the runtime rebuild), on
+fixed seeds.
+"""
+import numpy as np
+import pytest
+
+from repro.core.latency import SystemParams
+from repro.core.planner import (
+    expected_latency_mc,
+    plan_k,
+    replication_latency_mc,
+    uncoded_latency_mc,
+)
+from repro.core.runtime import (
+    SimScenario,
+    simulate_layer,
+    simulate_layer_batch,
+    simulate_network,
+)
+from repro.core.schemes import CodingScheme, get_scheme, scheme_names
+from repro.core.splitting import ConvSpec
+
+# W_O = 30 divides by the coded k=6, replication k=5 and uncoded n=10 below,
+# so the planner oracles (which skip/handle remainders differently) align.
+SPEC = ConvSpec(c_in=16, c_out=16, h_in=14, w_in=32, kernel=3, stride=1)
+PARAMS = SystemParams(mu_cmp=5e8, mu_rec=2e7, mu_sen=2e7)
+
+
+def _make(name: str, n: int = 8, k: int = 4):
+    cls = get_scheme(name)
+    return cls.make(n) if name == "uncoded" else cls.make(n, k)
+
+
+class TestRegistry:
+    def test_unknown_scheme_raises(self):
+        with pytest.raises(ValueError, match="unknown coding scheme"):
+            get_scheme("raptor")
+
+    def test_coded_aliases_mds(self):
+        assert get_scheme("coded") is get_scheme("mds")
+
+    @pytest.mark.parametrize("name", scheme_names())
+    def test_instances_satisfy_protocol(self, name):
+        scheme = _make(name)
+        assert isinstance(scheme, CodingScheme)
+        assert 1 <= scheme.min_done <= scheme.n
+        assert scheme.decodable(scheme.default_subset())
+
+    @pytest.mark.parametrize("name", scheme_names())
+    def test_redundancy_policy_in_range(self, name):
+        k = get_scheme(name).redundancy_policy(10, SPEC, PARAMS)
+        assert 1 <= k <= min(10, SPEC.w_out)
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("name", scheme_names())
+    @pytest.mark.parametrize("n,k", [(6, 3), (8, 4), (10, 7)])
+    def test_encode_drop_decode(self, name, n, k):
+        """encode -> drop r workers -> decode_from recovers the sources."""
+        scheme = _make(name, n, k)
+        rng = np.random.default_rng(n * 100 + k)
+        X = rng.standard_normal((scheme.k, 37)).astype(np.float32)
+        coded = np.asarray(scheme.encode(X))
+        assert coded.shape == (scheme.n, 37)
+
+        # greedily drop workers while the survivor set stays decodable
+        subset = list(range(scheme.n))
+        for _ in range(scheme.n - scheme.min_done):
+            for cand in rng.permutation(subset):
+                trial = [i for i in subset if i != cand]
+                if scheme.decodable(trial):
+                    subset = trial
+                    break
+        assert scheme.decodable(subset)
+        dec = np.asarray(scheme.decode_from(subset, coded[np.asarray(subset)]))
+        np.testing.assert_allclose(dec, X, rtol=5e-3, atol=5e-3)
+
+    def test_mds_oversized_subset_downselects(self):
+        """decodable() admits m > k rows, so decode_from must handle them."""
+        scheme = _make("mds", 6, 3)
+        X = np.random.default_rng(0).standard_normal((3, 11)).astype(np.float32)
+        coded = np.asarray(scheme.encode(X))
+        subset = [0, 2, 4, 5]  # m = 4 > k = 3
+        assert scheme.decodable(subset)
+        dec = np.asarray(scheme.decode_from(subset, coded[np.asarray(subset)]))
+        np.testing.assert_allclose(dec, X, rtol=5e-3, atol=5e-3)
+
+    def test_mds_oversized_subset_with_duplicates_downselects_distinct(self):
+        """decodable() counts distinct indices; decode_from must honour it."""
+        scheme = _make("mds", 6, 3)
+        X = np.random.default_rng(1).standard_normal((3, 9)).astype(np.float32)
+        coded = np.asarray(scheme.encode(X))
+        subset = [0, 0, 1, 2]  # first k positions repeat an index
+        assert scheme.decodable(subset)
+        dec = np.asarray(scheme.decode_from(subset, coded[np.asarray(subset)]))
+        np.testing.assert_allclose(dec, X, rtol=5e-3, atol=5e-3)
+
+    def test_uncoded_make_explicit_k_wins(self):
+        assert _make("uncoded", 10).n == 10
+        scheme = get_scheme("uncoded").make(10, 4)
+        assert scheme.n == scheme.k == 4
+
+    def test_uncoded_decode_unscrambles_subset_order(self):
+        scheme = _make("uncoded", 5)
+        X = np.arange(10, dtype=np.float32).reshape(5, 2)
+        coded = np.asarray(scheme.encode(X))
+        subset = [3, 0, 4, 1, 2]
+        dec = np.asarray(scheme.decode_from(subset, coded[np.asarray(subset)]))
+        np.testing.assert_array_equal(dec, X)
+
+    def test_uncoded_decode_tolerates_duplicates(self):
+        """decodable() collapses duplicates, so decode_from must too."""
+        scheme = _make("uncoded", 4)
+        X = np.arange(8, dtype=np.float32).reshape(4, 2)
+        coded = np.asarray(scheme.encode(X))
+        subset = [0, 0, 1, 2, 3]
+        assert scheme.decodable(subset)
+        dec = np.asarray(scheme.decode_from(subset, coded[np.asarray(subset)]))
+        np.testing.assert_array_equal(dec, X)
+
+    def test_undecodable_subsets_rejected(self):
+        assert not _make("replication", 6, 3).decodable([0, 3, 1])
+        assert not _make("uncoded", 4).decodable([0, 1, 2])
+        with pytest.raises(ValueError):
+            _make("uncoded", 4).decode_from([0, 1, 2], np.zeros((3, 2)))
+
+    @pytest.mark.parametrize("name", scheme_names())
+    def test_decodable_rejects_out_of_range_indices(self, name):
+        """Negative indices alias rows in numpy; the gate must catch them."""
+        scheme = _make(name, 6, 3)
+        full = scheme.default_subset()
+        assert not scheme.decodable(full[:-1] + [scheme.n])  # past the end
+        assert not scheme.decodable(full[:-1] + [-1])        # aliases row n-1
+
+    def test_pipelines_gate_undecodable_subsets(self):
+        """Both execution pipelines reject a non-decodable caller subset
+        (LT's lstsq would otherwise return silently wrong output)."""
+        import jax.numpy as jnp
+
+        from repro.core import coded_conv2d, coded_matmul
+
+        rep = _make("replication", 6, 3)
+        x = jnp.ones((9, 4), jnp.float32)
+        w = jnp.ones((4, 2), jnp.float32)
+        with pytest.raises(ValueError, match="not decodable"):
+            coded_matmul(x, w, rep, subset=[0, 3, 1])
+        spec = ConvSpec(c_in=2, c_out=2, h_in=6, w_in=8, kernel=3, stride=1)
+        xc = jnp.ones((1, 2, 6, 8), jnp.float32)
+        wc = jnp.ones((2, 2, 3, 3), jnp.float32)
+        with pytest.raises(ValueError, match="not decodable"):
+            coded_conv2d(xc, wc, rep, spec, subset=[0, 3, 1])
+
+
+class TestVectorizedRegression:
+    """Vectorized batches reproduce the per-trial loop and the planner MC."""
+
+    TRIALS = 1500
+
+    @pytest.mark.parametrize("method", ["coded", "uncoded", "replication", "lt"])
+    def test_batch_matches_per_trial_loop(self, method):
+        sc = SimScenario(lt_k=6) if method == "lt" else SimScenario()
+        k = 6 if method == "coded" else None
+        loop = np.array([
+            simulate_layer(SPEC, 10, PARAMS, method, k, sc,
+                           np.random.default_rng(10_000 + t))
+            for t in range(400)
+        ])
+        batch = simulate_layer_batch(SPEC, 10, PARAMS, method, k, sc,
+                                     np.random.default_rng(1), trials=self.TRIALS)
+        assert abs(batch.mean() / loop.mean() - 1.0) < 0.08, (
+            loop.mean(), batch.mean())
+
+    def test_coded_mean_matches_planner_mc(self):
+        """Independent oracle: planner.expected_latency_mc (eqs. 5/14)."""
+        k = 6  # divides W_O=30 -> no remainder ambiguity
+        oracle = expected_latency_mc(SPEC, 10, k, PARAMS, samples=20_000)
+        got = simulate_layer_batch(SPEC, 10, PARAMS, "coded", k,
+                                   rng=np.random.default_rng(2),
+                                   trials=self.TRIALS).mean()
+        assert abs(got / oracle - 1.0) < 0.05, (oracle, got)
+
+    def test_uncoded_mean_matches_planner_mc(self):
+        oracle = uncoded_latency_mc(SPEC, 10, PARAMS, samples=20_000)
+        got = simulate_layer_batch(SPEC, 10, PARAMS, "uncoded",
+                                   rng=np.random.default_rng(3),
+                                   trials=self.TRIALS).mean()
+        assert abs(got / oracle - 1.0) < 0.05, (oracle, got)
+
+    def test_replication_mean_matches_planner_mc(self):
+        oracle = replication_latency_mc(SPEC, 10, PARAMS, samples=20_000)
+        got = simulate_layer_batch(SPEC, 10, PARAMS, "replication",
+                                   rng=np.random.default_rng(4),
+                                   trials=self.TRIALS).mean()
+        assert abs(got / oracle - 1.0) < 0.05, (oracle, got)
+
+    def test_network_batch_is_layer_sum(self):
+        lat = simulate_network([SPEC, SPEC], 10, PARAMS, "coded", trials=64,
+                               seed=7)
+        one = simulate_network([SPEC], 10, PARAMS, "coded", trials=64, seed=7)
+        assert lat.shape == (64,)
+        assert lat.mean() > one.mean()
+
+    @pytest.mark.parametrize("method", ["coded", "uncoded", "replication"])
+    def test_failures_and_straggling_increase_latency(self, method):
+        base = simulate_layer_batch(SPEC, 10, PARAMS, method,
+                                    rng=np.random.default_rng(5),
+                                    trials=800).mean()
+        stressed = simulate_layer_batch(
+            SPEC, 10, PARAMS, method, None,
+            SimScenario(n_fail=2, straggler_slow=4.0, lambda_tr=0.5),
+            np.random.default_rng(5), trials=800).mean()
+        assert stressed > base
+
+
+class TestPlanK:
+    def test_plan_k_delegates_per_scheme(self):
+        assert plan_k("replication", SPEC, 10, PARAMS) == 5
+        assert plan_k("uncoded", SPEC, 10, PARAMS) == 10
+        k = plan_k("mds", SPEC, 10, PARAMS)
+        assert 1 <= k <= 10
+        assert plan_k("coded", SPEC, 10, PARAMS) == k

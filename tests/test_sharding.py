@@ -12,8 +12,15 @@ from repro.models.model import init_cache, init_params
 
 
 def _mesh_stub(shape, axes):
-    """AbstractMesh: lets us build NamedShardings without 256 devices."""
-    return jax.sharding.AbstractMesh(shape, axes)
+    """AbstractMesh: lets us build NamedShardings without 256 devices.
+
+    jax < 0.5 takes ``(name, size)`` pairs; jax >= 0.5 takes
+    ``(shape, axis_names)`` — support both.
+    """
+    try:
+        return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 @pytest.fixture(scope="module")
