@@ -1,0 +1,75 @@
+"""Live k-of-n coded execution on the threaded worker pool (DESIGN.md §7).
+
+Unlike examples/coded_cnn_inference.py — which *models* straggler latency
+with the Monte-Carlo simulator — this demo actually executes a coded conv
+layer on a WorkerPool under injected faults and measures the wall clock:
+
+1. one worker straggling 25x: MDS (n, k) returns at the k-th arrival and
+   cancels the straggler mid-sleep; uncoded must wait for it;
+2. one dead worker: MDS decodes from the survivors, uncoded re-dispatches
+   the lost piece and pays the retry;
+3. heterogeneous workers: ``hetero.allocate_pieces`` routes proportionally
+   more pieces to the fast worker.
+
+Run: PYTHONPATH=src python examples/distributed_pool.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.coded_conv import coded_conv2d, conv2d
+from repro.core.hetero import allocate_pieces
+from repro.core.schemes import get_scheme
+from repro.core.splitting import ConvSpec
+from repro.dist import CodedExecutor, DeterministicDelay, FaultPlan, RealClock
+
+N, K = 5, 3
+PIECE_S = 0.03  # modeled healthy round-trip per piece
+
+spec = ConvSpec(c_in=8, c_out=8, h_in=16, w_in=26, kernel=3, batch=2)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(2, 8, 16, 26)), jnp.float32)
+w = jnp.asarray(rng.normal(size=(8, 8, 3, 3)), jnp.float32)
+y_ref = conv2d(x, w, 1)
+
+
+def run(scheme, fault_plan, label):
+    ex = CodedExecutor(N, clock=RealClock(),
+                       delay_model=DeterministicDelay(PIECE_S),
+                       fault_plan=fault_plan)
+    y = coded_conv2d(x, w, scheme, spec, executor=ex)
+    r = ex.last_report
+    err = float(jnp.max(jnp.abs(y - y_ref)))
+    print(f"{label:26s} wall {r.wall_s * 1e3:7.1f} ms | subset {r.subset} | "
+          f"cancelled {r.cancelled} | redispatched {len(r.redispatched)} | "
+          f"max err {err:.2e}")
+    ex.close()
+    return r.wall_s
+
+
+mds = get_scheme("mds").make(N, K)
+unc = get_scheme("uncoded").make(N)
+
+print(f"-- scenario: one worker straggles 25x ({N} workers, MDS k={K}) --")
+straggle = FaultPlan(straggler={0: 25.0})
+t_c = run(mds, straggle, f"CoCoI MDS({N},{K})")
+t_u = run(unc, straggle, f"uncoded n={N}")
+print(f"latency reduction: {1 - t_c / t_u:+.1%}\n")
+
+print("-- scenario: one dead worker --")
+dead = FaultPlan(dead=frozenset({1}))
+t_c = run(mds, dead, f"CoCoI MDS({N},{K})")
+t_u = run(unc, dead, f"uncoded n={N}")
+print(f"latency reduction: {1 - t_c / t_u:+.1%}\n")
+
+print("-- scenario: heterogeneous workers (one 6x faster) --")
+speeds = [6.0, 1.0, 1.0]
+counts = allocate_pieces(speeds, mds.n)
+ex = CodedExecutor(3, clock=RealClock(),
+                   delay_model=DeterministicDelay(
+                       [PIECE_S / 6.0, PIECE_S, PIECE_S]))
+y = coded_conv2d(x, w, mds, spec, executor=ex, assignment=counts)
+r = ex.last_report
+print(f"piece counts {counts} for speeds {speeds}; wall "
+      f"{r.wall_s * 1e3:.1f} ms; assignment {r.assignment}; "
+      f"max err {float(jnp.max(jnp.abs(y - y_ref))):.2e}")
+ex.close()

@@ -15,10 +15,15 @@ protocol: any registered scheme (MDS, replication, LT, uncoded) slots in —
 route their encode/decode GEMMs through the Pallas kernels
 (kernels/mds_encode.py, kernels/mds_decode.py).
 
-Two execution modes:
+Three execution modes:
 
 * ``coded_conv2d``            — single-host functional form (vmap over the n
                                 subtasks); used by tests / the simulator.
+                                Passing ``executor=`` (a
+                                ``repro.dist.CodedExecutor``) instead runs the
+                                n subtasks on the threaded worker pool and
+                                decodes at the k-th *arrival* — stragglers are
+                                cancelled, failures re-dispatched (DESIGN.md §7).
 * ``coded_conv2d_sharded``    — shard_map over a mesh "worker" axis: each
                                 device holds one coded partition; this is the
                                 TPU-pod adaptation (DESIGN.md §3).
@@ -71,6 +76,8 @@ def coded_conv2d(
     spec: ConvSpec,
     subset: Sequence[int] | None = None,
     plan: SplitPlan | None = None,
+    executor=None,
+    assignment: Sequence[int] | None = None,
 ) -> jax.Array:
     """Full coded pipeline; returns the exact conv output f(x).
 
@@ -80,21 +87,36 @@ def coded_conv2d(
     discarded, which we emulate by simply not consuming them.  It may hold
     more than k indices for schemes that need extra symbols (LT); ``None``
     means the scheme's canonical decodable subset.
+
+    With ``executor`` (a ``repro.dist.CodedExecutor``) the subset is not
+    chosen up front: the n subtasks run on the worker pool and the decode
+    consumes the first decodable *arrivals* (``executor.last_report`` has
+    the evidence).  ``assignment`` optionally gives per-worker piece counts
+    (``hetero.allocate_pieces``); ``subset`` is ignored in this mode.
     """
-    subset = resolve_subset(code, subset)
     if plan is None:
         plan = plan_width_split(spec, code.k)
     parts = split_input(x, plan)  # (k, B, C, H, W_I^p)
     coded_in = _encode_partitions(code, parts)  # (n, ...)
 
-    # Execution phase: each worker i computes f(X~_i) with the same weights.
-    coded_out = jax.vmap(lambda xi: conv2d(xi, w, spec.stride))(coded_in)
+    if executor is not None:
+        # Execution phase on the pool: piece i is a real conv subtask.
+        y_parts = executor.run(
+            code,
+            [lambda i=i: conv2d(coded_in[i], w, spec.stride)
+             for i in range(code.n)],
+            assignment=assignment,
+        )  # (k, B, C_O, H_O, W_O^p)
+    else:
+        subset = resolve_subset(code, subset)
+        # Execution phase: each worker i computes f(X~_i), same weights.
+        coded_out = jax.vmap(lambda xi: conv2d(xi, w, spec.stride))(coded_in)
 
-    # Decoding phase: any sufficient subset of outputs decodes (eq. 4).
-    sel = coded_out[jnp.asarray(subset)]
-    flat = sel.reshape(len(subset), -1)
-    decoded = code.decode_from(subset, flat)
-    y_parts = decoded.reshape((code.k,) + coded_out.shape[1:])
+        # Decoding phase: any sufficient subset of outputs decodes (eq. 4).
+        sel = coded_out[jnp.asarray(subset)]
+        flat = sel.reshape(len(subset), -1)
+        decoded = code.decode_from(subset, flat)
+        y_parts = decoded.reshape((code.k,) + coded_out.shape[1:])
 
     # Reassemble on the width dim; master-kept remainder (footnote 2).
     y = jnp.concatenate(list(y_parts), axis=-1)

@@ -40,21 +40,36 @@ def coded_matmul(
     w: jax.Array,
     code: CodingScheme,
     subset: Sequence[int] | None = None,
+    executor=None,
+    assignment: Sequence[int] | None = None,
 ) -> jax.Array:
     """Exact Y = X @ W recovered from a decodable subset of the n coded
     worker GEMMs, under any registered scheme.
 
     x: (T, d_in), w: (d_in, d_out).  The remainder rows (T mod k) are
     computed by the master (paper footnote 2).
+
+    With ``executor`` (a ``repro.dist.CodedExecutor``) the n GEMM subtasks
+    run on the worker pool and the decode consumes the first decodable
+    arrivals; ``subset`` is ignored, ``assignment`` optionally routes
+    per-worker piece counts (``hetero.allocate_pieces``).
     """
-    subset = resolve_subset(code, subset)
     T = x.shape[0]
     plan = plan_token_split(T, code.k)
     coded_in = _encode_tokens(code, x, plan)  # (n, T_p, d_in)
-    coded_out = jnp.einsum("ntd,df->ntf", coded_in, w)  # n worker GEMMs
-    sel = coded_out[jnp.asarray(subset)]
-    decoded = code.decode_from(subset, sel.reshape(len(subset), -1))
-    y = decoded.reshape(code.k * plan.w_out_p, w.shape[-1])
+    if executor is not None:
+        decoded = executor.run(
+            code,
+            [lambda i=i: coded_in[i] @ w for i in range(code.n)],
+            assignment=assignment,
+        )  # (k, T_p, d_out)
+        y = decoded.reshape(code.k * plan.w_out_p, w.shape[-1])
+    else:
+        subset = resolve_subset(code, subset)
+        coded_out = jnp.einsum("ntd,df->ntf", coded_in, w)  # n worker GEMMs
+        sel = coded_out[jnp.asarray(subset)]
+        decoded = code.decode_from(subset, sel.reshape(len(subset), -1))
+        y = decoded.reshape(code.k * plan.w_out_p, w.shape[-1])
     if plan.remainder is not None:
         y = jnp.concatenate([y, x[plan.remainder.a_i :] @ w], axis=0)
     return y

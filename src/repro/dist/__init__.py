@@ -1,0 +1,29 @@
+"""In-process distributed coded-inference executor (DESIGN.md §7).
+
+Execution, not simulation: a :class:`WorkerPool` of threaded workers runs
+real Pallas/jnp subtask compute; the master decodes at the k-th arrival
+(via the ``CodingScheme`` protocol), cancels stragglers, and re-dispatches
+on injected failures.  ``FakeClock`` + ``DeterministicDelay`` make every
+§V scenario a deterministic wall-clock-free test; ``RealClock`` makes the
+k-of-n saving measurable.
+"""
+from .clock import Clock, FakeClock, RealClock
+from .executor import CodedExecutor, decodable_prefix
+from .faults import DelayModel, DeterministicDelay, FaultPlan, ShiftExpDelay
+from .pool import Arrival, Piece, RunReport, WorkerPool
+
+__all__ = [
+    "Clock",
+    "FakeClock",
+    "RealClock",
+    "CodedExecutor",
+    "decodable_prefix",
+    "DelayModel",
+    "DeterministicDelay",
+    "FaultPlan",
+    "ShiftExpDelay",
+    "Arrival",
+    "Piece",
+    "RunReport",
+    "WorkerPool",
+]

@@ -1,0 +1,104 @@
+"""Fault injection + per-piece delay models for the executor (DESIGN.md §7).
+
+A :class:`FaultPlan` scripts the §V scenarios onto a live pool run:
+
+* ``straggler``     — per-worker slowdown multipliers (scenario 3: one
+  worker's compute straggles 10x);
+* ``dead``          — workers that fail before completing anything
+  (scenario 2: device failure at dispatch);
+* ``fail_at_piece`` — worker dies when *starting* its i-th piece of the
+  run, after completing i pieces (mid-inference failure).
+
+Failure semantics match ``core/runtime.py``: a failed worker signals the
+master at the moment it *would have completed* the piece it died on
+(detection time), and the master re-dispatches its unfinished pieces to
+live workers.
+
+A :class:`DelayModel` maps (worker, piece) to a modeled round-trip
+duration in seconds.  ``None`` means "measured mode": the real compute
+time of the piece is the duration (wall-clock runs).  In measured mode a
+failed piece's would-be completion is unknowable (it never computes), so
+detection is effectively immediate — give the pool a DelayModel when the
+detection latency itself is under study.  The models are deterministic in
+(seed, worker, piece) — independent of thread interleaving — which is
+what the FakeClock tests rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from ..core.latency import PhaseSizes, SystemParams
+
+__all__ = [
+    "FaultPlan",
+    "DelayModel",
+    "DeterministicDelay",
+    "ShiftExpDelay",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Scripted faults for one pool run (empty plan = fault-free)."""
+
+    straggler: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    dead: frozenset = frozenset()
+    fail_at_piece: Mapping[int, int] = dataclasses.field(default_factory=dict)
+
+    def slowdown(self, worker: int) -> float:
+        return float(self.straggler.get(worker, 1.0))
+
+    def fails_at(self, worker: int) -> int | None:
+        """Local piece index at which ``worker`` dies, or None (never)."""
+        if worker in self.dead:
+            return 0
+        return self.fail_at_piece.get(worker)
+
+
+@runtime_checkable
+class DelayModel(Protocol):
+    """Modeled round-trip seconds for one coded piece on one worker."""
+
+    def piece_time(self, worker: int, piece: int) -> float: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class DeterministicDelay:
+    """Fixed per-worker piece duration — the test clock's workhorse.
+
+    ``per_worker`` is either one float (uniform pool) or a sequence with
+    one duration per worker.
+    """
+
+    per_worker: float | Sequence[float] = 1.0
+
+    def piece_time(self, worker: int, piece: int) -> float:
+        if isinstance(self.per_worker, (int, float)):
+            return float(self.per_worker)
+        return float(self.per_worker[worker])
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftExpDelay:
+    """Paper §III round-trip: rec + cmp + sen, each shift-exponential.
+
+    Sampling is keyed on ``(seed, worker, piece)`` so a duration is a pure
+    function of its coordinates — the same piece re-dispatched to the same
+    worker re-samples identically, and thread interleaving cannot perturb
+    a run.  (Approximation vs ``hetero.simulate_hetero``: the input
+    transmission is charged per piece, not once per worker.)
+    """
+
+    params: SystemParams
+    sizes: PhaseSizes
+    seed: int = 0
+
+    def piece_time(self, worker: int, piece: int) -> float:
+        rng = np.random.default_rng((self.seed, worker, piece))
+        t = self.params.rec.scaled(self.sizes.n_rec).sample(rng)
+        t += self.params.cmp.scaled(self.sizes.n_cmp).sample(rng)
+        t += self.params.sen.scaled(self.sizes.n_sen).sample(rng)
+        return float(t)

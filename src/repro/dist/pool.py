@@ -1,0 +1,437 @@
+"""In-process distributed worker pool with k-of-n early exit (DESIGN.md §7).
+
+``WorkerPool`` runs W persistent daemon threads ("workers").  A run
+dispatches N piece callables (real Pallas/jnp compute) across the workers
+and blocks in the master loop until a caller-supplied completion rule
+(``until``) accepts the set of arrivals — for coded execution that is
+"the arrived pieces form a decodable subset" (executor.py), at which point
+the master *cancels* every straggler and returns.  Workers that the
+:class:`~repro.dist.faults.FaultPlan` kills post a failure event at their
+would-be completion time and the master re-dispatches their unfinished
+pieces to live workers.
+
+Two time planes (see clock.py):
+
+* ``RealClock`` — workers sleep out their modeled duration, arrivals reach
+  the master in wall order, cancellation interrupts sleeping stragglers:
+  the k-of-n saving is measured wall-clock.
+* ``FakeClock`` — workers never sleep; every event carries a virtual
+  timestamp computed from the DelayModel, and the master merges events in
+  virtual-time order (a safe streaming merge: an event is processed only
+  once no still-pending worker can emit an earlier one).  Runs are
+  bit-deterministic regardless of OS scheduling.
+
+Failure events ride the same time-ordered merge as arrivals, and every
+master decision (decode-at-k, re-dispatch targets) is computed from
+*processed* state only — never from the racy order in which events happen
+to reach the queue — so FakeClock runs are bit-deterministic even when a
+failure forces re-dispatch across several live workers.  Re-dispatched
+pieces carry ``not_before = t_detect``, so completion times remain
+causally consistent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import queue
+import threading
+import time
+from typing import Any, Callable, Sequence
+
+from .clock import Clock, FakeClock, RealClock
+from .faults import DelayModel, FaultPlan
+
+__all__ = ["Piece", "Arrival", "RunReport", "WorkerPool"]
+
+_STOP = object()
+_MIN_DUR = 1e-9  # keeps per-worker virtual timelines strictly increasing
+
+
+@dataclasses.dataclass(frozen=True)
+class Piece:
+    """One dispatched subtask: coded piece index + its compute thunk."""
+
+    idx: int
+    fn: Callable[[], Any]
+    not_before: float = 0.0  # virtual gate: re-dispatches start >= t_detect
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    worker: int
+    piece: int
+    t: float  # virtual seconds from run start (== modeled wall in real mode)
+
+
+@dataclasses.dataclass
+class RunReport:
+    """What one pool run did — the executor's evidence trail."""
+
+    t_complete: float                 # modeled time of the accepting arrival
+    wall_s: float                     # measured wall-clock of the run
+    subset: list[int]                 # piece ids the completion rule consumed
+    arrivals: list[Arrival]           # arrivals processed, in (virtual) order
+    failures: list[tuple[int, float]]  # (worker, t_detect)
+    redispatched: list[tuple[int, int, int]]  # (piece, from_w, to_w)
+    cancelled: list[int]              # piece ids dispatched but never consumed
+    assignment: dict[int, int]        # piece id -> worker that produced it
+
+
+@dataclasses.dataclass
+class _RunCtx:
+    """Per-run shared state handed to worker threads with each piece."""
+
+    epoch: int
+    cancel: threading.Event
+    faults: FaultPlan
+    delay: DelayModel | None
+    clock: Clock
+    time_scale: float
+    t0_wall: float
+    post: Callable[["_Event"], None]
+
+
+@dataclasses.dataclass
+class _Event:
+    kind: str        # "arrival" | "failure" | "error"
+    epoch: int
+    worker: int
+    piece: int
+    t: float
+    payload: Any = None
+
+
+@dataclasses.dataclass
+class _MasterState:
+    """One run's master bookkeeping (see the comment at its construction:
+    receipt-time fields feed the safe-merge bound, processing-time fields
+    feed every decision)."""
+
+    owner: dict[int, int]
+    thunks: dict[int, Callable[[], Any]]
+    # -- receipt-time (racy; bound/liveness only) --
+    pending: list[set[int]]
+    last_t: list[float]
+    arrived: set[int] = dataclasses.field(default_factory=set)
+    heap: list = dataclasses.field(default_factory=list)
+    # -- processing-time (deterministic under the time-ordered merge) --
+    proc_t: list[float] = dataclasses.field(default_factory=list)
+    dead: set[int] = dataclasses.field(default_factory=set)
+    lost: dict[int, float] = dataclasses.field(default_factory=dict)
+    results: dict[int, Any] = dataclasses.field(default_factory=dict)
+    order: list[int] = dataclasses.field(default_factory=list)
+
+    def outstanding(self, v: int) -> int:
+        """Pieces assigned to v not yet *processed* as arrivals — the
+        deterministic load measure for re-dispatch target choice."""
+        done = set(self.order)
+        return sum(1 for p, w in self.owner.items()
+                   if w == v and p not in done and p not in self.lost)
+
+
+class WorkerPool:
+    """W threaded workers + a master that collects, re-dispatches, cancels.
+
+    One run at a time (``run`` holds a lock); the pool itself is reusable
+    across many runs — the serving engine keeps one per process.  Stale
+    events from a cancelled run are fenced off by an epoch counter, so a
+    straggler still sleeping from run e cannot pollute run e+1.
+    """
+
+    def __init__(self, n_workers: int, *, clock: Clock | None = None,
+                 delay_model: DelayModel | None = None,
+                 fault_plan: FaultPlan | None = None,
+                 time_scale: float = 1.0, timeout_s: float = 120.0):
+        if n_workers < 1:
+            raise ValueError(f"need n_workers >= 1, got {n_workers}")
+        self.n_workers = n_workers
+        self.clock: Clock = clock if clock is not None else RealClock()
+        self.delay_model = delay_model
+        self.fault_plan = fault_plan or FaultPlan()
+        self.time_scale = float(time_scale)
+        self.timeout_s = float(timeout_s)
+        self._run_lock = threading.Lock()
+        self._epoch = 0
+        self._events: queue.Queue[_Event] = queue.Queue()
+        self._inbox: list[queue.Queue] = [queue.Queue() for _ in range(n_workers)]
+        self._threads = [
+            threading.Thread(target=self._worker_loop, args=(w,), daemon=True,
+                             name=f"cocoi-worker-{w}")
+            for w in range(n_workers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        for box in self._inbox:
+            box.put(_STOP)
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    def __enter__(self) -> "WorkerPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker side -------------------------------------------------------
+    def _worker_loop(self, w: int) -> None:
+        epoch, t_free, done, failed = -1, 0.0, 0, False
+        while True:
+            item = self._inbox[w].get()
+            if item is _STOP:
+                return
+            ctx, piece = item
+            if ctx.epoch != epoch:  # new run: reset the per-run timeline
+                epoch, t_free, done, failed = ctx.epoch, 0.0, 0, False
+            if failed or ctx.cancel.is_set():
+                continue
+            fail_at = ctx.faults.fails_at(w)
+            if fail_at is not None and done >= fail_at:
+                # die on this piece; detection at the would-be completion
+                # (core/runtime.py failure semantics)
+                dur = self._duration(ctx, w, piece)
+                t_detect = max(t_free, piece.not_before) + dur
+                failed = True
+                if not ctx.clock.virtual:
+                    self._sleep_until(ctx, t_detect)
+                ctx.post(_Event("failure", ctx.epoch, w, piece.idx, t_detect))
+                continue
+            try:
+                t0 = time.perf_counter()
+                result = piece.fn()  # the real subtask compute
+                if hasattr(result, "block_until_ready"):
+                    result.block_until_ready()
+                elapsed = time.perf_counter() - t0
+            except Exception as e:  # master re-raises
+                ctx.post(_Event("error", ctx.epoch, w, piece.idx, t_free,
+                                payload=e))
+                failed = True
+                continue
+            dur = self._duration(ctx, w, piece, measured=elapsed)
+            t_fin = max(t_free, piece.not_before) + dur
+            t_free, done = t_fin, done + 1
+            if not ctx.clock.virtual:
+                if not self._sleep_until(ctx, t_fin):
+                    continue  # cancelled mid-sleep: drop the late result
+            ctx.post(_Event("arrival", ctx.epoch, w, piece.idx, t_fin,
+                            payload=result))
+
+    def _duration(self, ctx: _RunCtx, w: int, piece: Piece, *,
+                  measured: float | None = None) -> float:
+        if ctx.delay is not None:
+            base = ctx.delay.piece_time(w, piece.idx)
+        else:
+            base = measured if measured is not None else 0.0
+        return max(base * ctx.faults.slowdown(w), _MIN_DUR)
+
+    def _sleep_until(self, ctx: _RunCtx, t_virtual: float) -> bool:
+        """Real mode: land this event at wall time t0 + t_virtual*scale."""
+        target = ctx.t0_wall + t_virtual * ctx.time_scale
+        return ctx.clock.sleep(target - ctx.clock.now(), cancel=ctx.cancel)
+
+    # -- master side -------------------------------------------------------
+    def run(
+        self,
+        pieces: Sequence[Callable[[], Any]],
+        until: Callable[[list[int]], list[int] | None],
+        *,
+        assignment: Sequence[int] | None = None,
+        fault_plan: FaultPlan | None = None,
+        delay_model: DelayModel | None = None,
+        viable: Callable[[list[int]], bool] | None = None,
+    ) -> tuple[dict[int, Any], RunReport]:
+        """Execute ``pieces`` across the workers until ``until`` accepts.
+
+        ``until`` sees the arrived piece ids in (virtual) arrival order and
+        returns the consuming subset, or None to keep waiting — the coded
+        executor's rule is "the smallest decodable prefix".  ``assignment``
+        gives per-worker piece *counts* (``hetero.allocate_pieces`` output:
+        worker w runs ``assignment[w]`` consecutive pieces); default is
+        round-robin.
+
+        ``viable(ids)`` asks "could ``until`` ever accept if exactly the
+        pieces in ``ids`` arrive?" (the executor passes the scheme's
+        ``decodable``).  It gates re-dispatch after a failure: lost pieces
+        are re-executed on live workers only when the still-obtainable set
+        is not viable — otherwise redundancy absorbs the failure, exactly
+        like core/runtime.py's simulator.  Without it every lost piece is
+        re-dispatched.  Returns ({piece id: result} for the consumed
+        subset, :class:`RunReport`).
+        """
+        with self._run_lock:
+            return self._run_locked(pieces, until, assignment,
+                                    fault_plan or self.fault_plan,
+                                    delay_model if delay_model is not None
+                                    else self.delay_model, viable)
+
+    def _run_locked(self, pieces, until, assignment, faults, delay, viable):
+        if self.clock.virtual and delay is None:
+            raise ValueError(
+                "a virtual clock needs a DelayModel: with measured compute "
+                "times as virtual durations the run would be OS-scheduling "
+                "dependent, defeating the deterministic clock")
+        n = len(pieces)
+        owner = self._initial_assignment(n, assignment)
+        self._epoch += 1
+        wall0 = time.perf_counter()
+        ctx = _RunCtx(self._epoch, threading.Event(), faults, delay,
+                      self.clock, self.time_scale, self.clock.now(),
+                      self._events.put)
+        thunks = {i: fn for i, fn in enumerate(pieces)}
+        # master state.  Receipt-time state (pending / arrived / last_t) is
+        # OS-scheduling dependent and is used ONLY for the safe-merge bound
+        # and liveness; every decision that shapes the run (decode subset,
+        # re-dispatch targets) reads processing-time state, which the
+        # time-ordered merge makes deterministic.
+        st = _MasterState(owner=owner, thunks=thunks,
+                          pending=[set() for _ in range(self.n_workers)],
+                          last_t=[0.0] * self.n_workers,
+                          proc_t=[0.0] * self.n_workers)
+        for i in range(n):
+            st.pending[owner[i]].add(i)
+        report = RunReport(0.0, 0.0, [], [], [], [], [], dict(owner))
+        try:
+            for w in range(self.n_workers):
+                for i in sorted(st.pending[w]):
+                    self._inbox[w].put((ctx, Piece(i, thunks[i])))
+            while True:
+                done = self._drain_safe(st, until, viable, report, ctx)
+                if done is not None:
+                    report.t_complete = done
+                    report.wall_s = time.perf_counter() - wall0
+                    report.cancelled = sorted(set(range(n)) - set(st.order))
+                    if self.clock.virtual and isinstance(self.clock, FakeClock):
+                        self.clock.advance(done)
+                    return ({i: st.results[i] for i in report.subset}, report)
+                if not any(st.pending) and not st.heap:
+                    if st.lost:
+                        # backstop: viable() was optimistic (or absent) and
+                        # the pool idled — re-execute what was lost
+                        self._redispatch(st, ctx, report)
+                        continue
+                    raise RuntimeError(
+                        "pool exhausted: every piece arrived but the "
+                        f"completion rule never accepted (arrived={st.order})")
+                ev = self._next_event(ctx)
+                if ev.kind == "error":
+                    raise RuntimeError(
+                        f"worker {ev.worker} raised on piece {ev.piece}"
+                    ) from ev.payload
+                st.last_t[ev.worker] = max(st.last_t[ev.worker], ev.t)
+                if ev.kind == "arrival":
+                    st.arrived.add(ev.piece)
+                    st.pending[ev.worker].discard(ev.piece)
+                heapq.heappush(st.heap, (ev.t, ev.worker, ev.piece, ev))
+        finally:
+            ctx.cancel.set()  # abort stragglers; epoch fences stale events
+
+    def _initial_assignment(self, n: int, counts) -> dict[int, int]:
+        owner: dict[int, int] = {}
+        if counts is None:
+            for i in range(n):
+                owner[i] = i % self.n_workers
+            return owner
+        counts = [int(c) for c in counts]
+        if len(counts) != self.n_workers or sum(counts) != n or min(counts) < 0:
+            raise ValueError(
+                f"assignment {counts} must have one count >= 0 per worker "
+                f"({self.n_workers}) summing to the piece count ({n})")
+        i = 0
+        for w, c in enumerate(counts):
+            for _ in range(c):
+                owner[i] = w
+                i += 1
+        return owner
+
+    def _next_event(self, ctx: _RunCtx) -> _Event:
+        deadline = time.monotonic() + self.timeout_s
+        while True:
+            try:
+                ev = self._events.get(timeout=max(deadline - time.monotonic(),
+                                                  0.01))
+            except queue.Empty:
+                raise RuntimeError(
+                    f"pool stalled: no event within {self.timeout_s}s "
+                    "(dead workers without redundancy?)") from None
+            if ev.epoch == ctx.epoch:  # drop stale events from prior runs
+                return ev
+
+    def _drain_safe(self, st: _MasterState, until, viable, report,
+                    ctx) -> float | None:
+        """Process every heap event that is safe in virtual-time order;
+        return the accepting arrival's time when ``until`` fires."""
+        while st.heap:
+            t, _w, _p, ev = st.heap[0]
+            if self.clock.virtual and not self._safe(t, st):
+                return None
+            heapq.heappop(st.heap)
+            st.proc_t[ev.worker] = max(st.proc_t[ev.worker], ev.t)
+            if ev.kind == "failure":
+                self._on_failure(ev, st, viable, report, ctx)
+                continue
+            st.results[ev.piece] = ev.payload
+            if ev.piece not in st.order:
+                st.order.append(ev.piece)
+                report.arrivals.append(Arrival(ev.worker, ev.piece, ev.t))
+                subset = until(list(st.order))
+                if subset is not None:
+                    report.subset = list(subset)
+                    return max(report.arrivals[st.order.index(p)].t
+                               for p in subset)
+        return None
+
+    def _safe(self, t: float, st: _MasterState) -> bool:
+        """No still-pending live worker can emit an event earlier than t:
+        per-worker timelines are strictly increasing, so worker w's next
+        event lands strictly after last_t[w]."""
+        return all(
+            t <= st.last_t[w]
+            for w in range(self.n_workers)
+            if st.pending[w] and w not in st.dead
+        )
+
+    def _on_failure(self, ev, st: _MasterState, viable, report, ctx) -> None:
+        w = ev.worker
+        st.dead.add(w)
+        report.failures.append((w, ev.t))
+        for p in st.pending[w]:
+            st.lost[p] = ev.t
+        st.pending[w].clear()
+        if not st.lost:
+            return
+        # still-obtainable pieces: arrived (received or processed) plus
+        # pending on live workers.  Each piece sits on exactly one side of
+        # the receipt race, so the UNION is deterministic even though the
+        # two components individually are not.
+        obtainable = st.arrived.union(
+            *(st.pending[v] for v in range(self.n_workers)
+              if v not in st.dead))
+        if viable is not None and viable(sorted(obtainable)):
+            return  # redundancy absorbs the failure; lost pieces ignored
+        self._redispatch(st, ctx, report)
+
+    def _redispatch(self, st: _MasterState, ctx, report) -> None:
+        live = [v for v in range(self.n_workers) if v not in st.dead]
+        if not live:
+            raise RuntimeError(
+                f"pieces {sorted(st.lost)} lost to failures and no live "
+                "workers remain")
+        # deterministic spread: least-loaded live worker first, where load
+        # and tie-breaks read PROCESSED state only (outstanding assigned
+        # pieces, last processed event time) — receipt-order state would
+        # make the target, and with it the whole run, scheduling-dependent
+        load = {v: st.outstanding(v) for v in live}
+        for p in sorted(st.lost):
+            t_detect = st.lost[p]
+            tgt = min(live, key=lambda v: (load[v], st.proc_t[v], v))
+            load[tgt] += 1
+            st.pending[tgt].add(p)
+            src = st.owner[p]
+            st.owner[p] = tgt
+            report.assignment[p] = tgt
+            report.redispatched.append((p, src, tgt))
+            self._inbox[tgt].put(
+                (ctx, Piece(p, st.thunks[p], not_before=t_detect)))
+        st.lost.clear()

@@ -18,9 +18,11 @@ All functions are pure; params are nested dicts so pjit partitioning rules
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import math
+import threading
 from typing import Any
 
 import jax
@@ -38,7 +40,35 @@ from .ssm import (
     mamba_step,
 )
 
-__all__ = ["ModelConfig", "init_params", "forward", "prefill", "decode_step", "init_cache", "param_count"]
+__all__ = ["ModelConfig", "init_params", "forward", "prefill", "decode_step",
+           "init_cache", "param_count", "coded_executor", "current_executor"]
+
+
+# ---------------------------------------------------------------------------
+# executor context: live distributed execution of the coded GEMMs
+# ---------------------------------------------------------------------------
+# ModelConfig must stay hashable (it is closed over by jitted functions), so
+# the executor — a stateful thread pool — rides a thread-local context
+# instead of the config.  The serving engine sets it around eagerly-executed
+# batches (serving/engine.py); jitted traces never see it (an executor
+# cannot run under tracing: worker arrival order is data-dependent).
+
+_EXECUTOR_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def coded_executor(executor):
+    """Route this thread's coded GEMMs through a ``repro.dist.CodedExecutor``."""
+    prev = getattr(_EXECUTOR_TLS, "executor", None)
+    _EXECUTOR_TLS.executor = executor
+    try:
+        yield executor
+    finally:
+        _EXECUTOR_TLS.executor = prev
+
+
+def current_executor():
+    return getattr(_EXECUTOR_TLS, "executor", None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,7 +280,14 @@ def _matmul(cfg: ModelConfig, x: jax.Array, w: jax.Array) -> jax.Array:
         code = _coded_scheme(cfg.coded_scheme, cfg.coded_n, cfg.coded_k or None)
         if tokens >= code.k:
             flat = x.reshape(-1, shape[-1]).astype(jnp.float32)
-            y = coded_matmul(flat, w.astype(jnp.float32), code)
+            # live distributed execution only outside jit traces: arrival
+            # order (and thus the decode subset) is data-dependent
+            ex = current_executor()
+            if ex is not None and not isinstance(x, jax.core.Tracer):
+                y = coded_matmul(flat, w.astype(jnp.float32), code,
+                                 executor=ex)
+            else:
+                y = coded_matmul(flat, w.astype(jnp.float32), code)
             return y.reshape(*shape[:-1], w.shape[-1]).astype(x.dtype)
     # tiny subtasks run on the master (paper footnote 2) — plain GEMM
     return x @ w

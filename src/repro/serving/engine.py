@@ -7,9 +7,23 @@ GEMMs to CoCoI (n, k) coded execution (ModelConfig.coded_n/k) under any
 scheme registered in core/schemes.py (``scheme="mds"|"replication"|"lt"|
 "uncoded"``), making straggler-tolerant inference a first-class serving
 mode.
+
+``executor`` upgrades the coded mode from in-line SPMD emulation to *live*
+distributed execution: a ``repro.dist.CodedExecutor`` worker pool runs the
+coded FFN GEMMs, decoding each at the k-th arrival and cancelling
+stragglers (DESIGN.md §7).  The model then runs eagerly (no jit — arrival
+order is data-dependent), so this mode trades throughput for real
+straggler tolerance; it is the serving-path analogue of the paper's
+testbed.
+
+Latency accounting is per request: ``latency_s`` measures from the
+``generate()`` call to that request's last token (so requests queued
+behind earlier buckets correctly include their wait), ``first_token_s``
+to its first generated token.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Sequence
@@ -19,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import decode_step, init_params, prefill
-from ..models.model import ModelConfig
+from ..models.model import ModelConfig, coded_executor
 
 __all__ = ["Request", "Completion", "Engine"]
 
@@ -35,12 +49,14 @@ class Request:
 class Completion:
     rid: int
     tokens: np.ndarray  # generated ids
-    latency_s: float
+    latency_s: float        # generate() entry -> this request's last token
+    first_token_s: float = 0.0  # generate() entry -> its first token
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params=None, *, coded: tuple | None = None,
-                 scheme: str | None = None, max_batch: int = 8, seed: int = 0):
+                 scheme: str | None = None, max_batch: int = 8, seed: int = 0,
+                 executor=None):
         # scheme=None means "whatever cfg.coded_scheme says" — a default of
         # "mds" would silently clobber a config that chose another scheme
         if scheme is not None:
@@ -54,37 +70,76 @@ class Engine:
             # cfg may already enable coding (coded_n > 0): honour the
             # requested scheme rather than silently keeping cfg's
             cfg = dataclasses.replace(cfg, coded_scheme=scheme)
+        if executor is not None:
+            if not cfg.coded_n:
+                raise ValueError(
+                    "executor= requires coded execution: pass coded=(n, k) "
+                    "or a cfg with coded_n/coded_k set (otherwise the "
+                    "engine would just run eagerly with the pool idle)")
+            # live pool execution is data-dependent — run the model eagerly
+            # AND with python-loop layers (unstacked_exec): under lax.scan
+            # the FFN matmuls trace as abstract values and would silently
+            # bypass the executor
+            cfg = dataclasses.replace(cfg, unstacked_exec=True)
         self.cfg = cfg
         self.params = params if params is not None else init_params(
             cfg, jax.random.PRNGKey(seed))
+        if executor is not None and isinstance(self.params.get("layers"), dict):
+            # params came from a stacked engine (leading L dim on every
+            # leaf); unstacked execution iterates a per-layer list
+            stacked = self.params["layers"]
+            self.params = {**self.params, "layers": [
+                jax.tree_util.tree_map(lambda a: a[i], stacked)
+                for i in range(cfg.n_layers)]}
         self.max_batch = max_batch
-        self._prefill = jax.jit(
-            lambda p, t, ms: prefill(cfg, p, t, max_seq=ms),
-            static_argnames=("ms",))
-        self._decode = jax.jit(lambda p, c, t: decode_step(cfg, p, c, token=t))
+        self.executor = executor
+        if executor is None:
+            self._prefill = jax.jit(
+                lambda p, t, ms: prefill(cfg, p, t, max_seq=ms),
+                static_argnames=("ms",))
+            self._decode = jax.jit(lambda p, c, t: decode_step(cfg, p, c, token=t))
+        else:
+            self._prefill = lambda p, t, ms: prefill(cfg, p, t, max_seq=ms)
+            self._decode = lambda p, c, t: decode_step(cfg, p, c, token=t)
+
+    def _executor_ctx(self):
+        if self.executor is None:
+            return contextlib.nullcontext()
+        return coded_executor(self.executor)
 
     def generate(self, requests: Sequence[Request]) -> list[Completion]:
+        t0 = time.perf_counter()
         out: list[Completion] = []
         # bucket by (prompt length, max_new) for exact equal-length batching
         buckets: dict[tuple, list[Request]] = {}
         for r in requests:
             buckets.setdefault((len(r.prompt), r.max_new), []).append(r)
-        for (T, max_new), rs in buckets.items():
-            for i in range(0, len(rs), self.max_batch):
-                chunk = rs[i : i + self.max_batch]
-                out.extend(self._run_batch(chunk, T, max_new))
+        with self._executor_ctx():
+            for (T, max_new), rs in buckets.items():
+                for i in range(0, len(rs), self.max_batch):
+                    chunk = rs[i : i + self.max_batch]
+                    out.extend(self._run_batch(chunk, T, max_new, t0))
         return sorted(out, key=lambda c: c.rid)
 
-    def _run_batch(self, chunk: list[Request], T: int, max_new: int):
-        t0 = time.perf_counter()
+    def _run_batch(self, chunk: list[Request], T: int, max_new: int,
+                   t0: float):
         toks = jnp.asarray(np.stack([r.prompt for r in chunk]), jnp.int32)
         logits, cache = self._prefill(self.params, toks, T + max_new)
         generated = []
         nxt = jnp.argmax(logits[..., : self.cfg.vocab], -1).astype(jnp.int32)
-        for _ in range(max_new):
-            generated.append(np.asarray(nxt)[:, 0])
-            logits, cache = self._decode(self.params, cache, nxt)
-            nxt = jnp.argmax(logits[..., : self.cfg.vocab], -1).astype(jnp.int32)
+        t_first = None
+        for step in range(max_new):
+            step_tok = np.asarray(nxt)[:, 0]  # materialized -> token exists
+            if t_first is None:
+                t_first = time.perf_counter() - t0
+            generated.append(step_tok)
+            if step + 1 < max_new:  # the last token needs no further decode
+                logits, cache = self._decode(self.params, cache, nxt)
+                nxt = jnp.argmax(logits[..., : self.cfg.vocab], -1).astype(jnp.int32)
         dt = time.perf_counter() - t0
-        gen = np.stack(generated, axis=1)  # (B, max_new)
-        return [Completion(r.rid, gen[j], dt) for j, r in enumerate(chunk)]
+        if t_first is None:  # max_new == 0: prefill-only request
+            t_first = dt
+        gen = (np.stack(generated, axis=1) if generated
+               else np.zeros((len(chunk), 0), np.int32))  # (B, max_new)
+        return [Completion(r.rid, gen[j], dt, t_first)
+                for j, r in enumerate(chunk)]

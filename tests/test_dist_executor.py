@@ -1,0 +1,332 @@
+"""E2e regression tests for the distributed executor (ISSUE 2 tentpole).
+
+The headline claim — inference completes at the k-th of n workers — is
+exercised on *real* execution: threaded workers running actual jnp/Pallas
+subtask compute, a deterministic fake clock, scripted stragglers and
+failures.  The acceptance test pins completion time to the k-th worker's
+virtual finish time exactly.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.coded_conv import coded_conv2d, conv2d
+from repro.core.coded_linear import coded_matmul
+from repro.core.hetero import allocate_pieces
+from repro.core.schemes import get_scheme, scheme_names
+from repro.core.splitting import ConvSpec
+from repro.dist import (
+    CodedExecutor,
+    DeterministicDelay,
+    FakeClock,
+    FaultPlan,
+    RealClock,
+    WorkerPool,
+    decodable_prefix,
+)
+
+
+@pytest.fixture
+def conv_case():
+    spec = ConvSpec(c_in=3, c_out=4, h_in=8, w_in=14, kernel=3, stride=1,
+                    batch=2)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(2, 3, 8, 14)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(4, 3, 3, 3)), jnp.float32)
+    return spec, x, w, conv2d(x, w, 1)
+
+
+def _fake_executor(n, **kw):
+    kw.setdefault("clock", FakeClock())
+    kw.setdefault("delay_model", DeterministicDelay(1.0))
+    return CodedExecutor(n, **kw)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: early exit at the k-th arrival under a 10x straggler
+# ---------------------------------------------------------------------------
+
+def test_mds_early_exit_at_kth_arrival(conv_case):
+    """With one worker delayed 10x, (n, k) MDS completes at the k-th
+    worker's finish time — not the n-th — and decodes exactly."""
+    spec, x, w, y_ref = conv_case
+    n, k = 5, 3
+    code = get_scheme("mds").make(n, k)
+    ex = _fake_executor(n, fault_plan=FaultPlan(straggler={0: 10.0}))
+    y = coded_conv2d(x, w, code, spec, executor=ex)
+    r = ex.last_report
+
+    # every healthy worker finishes its single piece at t=1; the straggler
+    # at t=10.  completion == the k-th virtual finish time == 1.0 exactly.
+    finishes = sorted(10.0 if i == 0 else 1.0 for i in range(n))
+    assert r.t_complete == finishes[k - 1] == 1.0
+    assert r.t_complete < finishes[-1]  # beat waiting for the n-th
+    assert 0 not in r.subset            # straggler's piece not consumed
+    assert len(r.subset) == k           # decoded at exactly the k-th arrival
+    assert 0 in r.cancelled
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+    # uncoded must wait for the straggler: completion == the n-th finish
+    unc = get_scheme("uncoded").make(n)
+    ex_u = _fake_executor(n, fault_plan=FaultPlan(straggler={0: 10.0}))
+    y_u = coded_conv2d(x, w, unc, spec, executor=ex_u)
+    assert ex_u.last_report.t_complete == 10.0
+    assert r.t_complete < ex_u.last_report.t_complete
+    np.testing.assert_allclose(np.asarray(y_u), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fake_clock_runs_are_deterministic(conv_case):
+    spec, x, w, _ = conv_case
+    code = get_scheme("mds").make(5, 3)
+
+    def run():
+        ex = _fake_executor(5, fault_plan=FaultPlan(straggler={2: 7.0}))
+        y = coded_conv2d(x, w, code, spec, executor=ex)
+        return np.asarray(y), ex.last_report
+
+    y1, r1 = run()
+    y2, r2 = run()
+    assert r1.subset == r2.subset
+    assert r1.t_complete == r2.t_complete
+    assert [a.piece for a in r1.arrivals] == [a.piece for a in r2.arrivals]
+    np.testing.assert_array_equal(y1, y2)
+
+
+# ---------------------------------------------------------------------------
+# dead worker: every registered scheme still decodes vs the uncoded reference
+# ---------------------------------------------------------------------------
+
+# one-dead-worker-tolerant instance of every registered scheme
+_DEAD_CASES = {
+    "mds": lambda: get_scheme("mds").make(6, 4),
+    "replication": lambda: get_scheme("replication").make(6),  # k=3, 2 copies
+    "lt": lambda: get_scheme("lt").make(6, 4),
+    "uncoded": lambda: get_scheme("uncoded").make(6),          # n=k: retry
+}
+
+
+def test_dead_cases_cover_registry():
+    assert sorted(_DEAD_CASES) == scheme_names()
+
+
+@pytest.mark.parametrize("name", sorted(_DEAD_CASES))
+def test_dead_worker_every_scheme_decodes(conv_case, name):
+    spec, x, w, y_ref = conv_case
+    scheme = _DEAD_CASES[name]()
+    ex = _fake_executor(scheme.n, fault_plan=FaultPlan(dead=frozenset({1})))
+    y = coded_conv2d(x, w, scheme, spec, executor=ex)
+    r = ex.last_report
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    if name == "uncoded":
+        # no redundancy: the dead worker's piece must be re-dispatched
+        assert r.failures and r.failures[0][0] == 1
+        assert any(p == 1 and src == 1 for p, src, _ in r.redispatched)
+        # detect at t=1 (would-be completion), retry lands at t=2
+        assert r.t_complete == 2.0
+    else:
+        # redundancy absorbs the failure: no re-dispatch, worker 1 unused
+        assert not r.redispatched
+        assert 1 not in {a.worker for a in r.arrivals}
+
+
+def test_fail_at_piece_absorbed_by_redundancy():
+    """Mid-run failure whose losses redundancy covers: no re-dispatch,
+    decode proceeds from the still-obtainable pieces (runtime.py's
+    "ignored if enough redundancy remains")."""
+    scheme = get_scheme("mds").make(6, 4)
+    src = np.arange(4 * 10, dtype=np.float32).reshape(4, 10)
+    coded = np.asarray(scheme.encode(jnp.asarray(src)))
+    # 2 workers, 3 pieces each; worker 0 dies when starting its 2nd piece;
+    # the 4 surviving pieces {0, 3, 4, 5} still decode (k=4)
+    ex = _fake_executor(2, fault_plan=FaultPlan(fail_at_piece={0: 1}))
+    y = ex.run(scheme, [lambda i=i: coded[i] for i in range(6)],
+               assignment=[3, 3])
+    r = ex.last_report
+    assert r.failures == [(0, 2.0)]  # completed piece 0 at t=1, died at t=2
+    assert not r.redispatched
+    # worker 1's serial pieces arrive at t=1,2,3: decode at the 4th arrival
+    assert r.t_complete == 3.0
+    np.testing.assert_allclose(np.asarray(y), src, rtol=1e-4, atol=1e-4)
+
+
+def test_fail_at_piece_redispatch_on_shortfall():
+    """Mid-run failure that leaves fewer than k obtainable pieces: the
+    lost pieces are re-executed on the live worker after detection."""
+    scheme = get_scheme("mds").make(6, 5)
+    src = np.arange(5 * 10, dtype=np.float32).reshape(5, 10)
+    coded = np.asarray(scheme.encode(jnp.asarray(src)))
+    ex = _fake_executor(2, fault_plan=FaultPlan(fail_at_piece={0: 1}))
+    y = ex.run(scheme, [lambda i=i: coded[i] for i in range(6)],
+               assignment=[3, 3])
+    r = ex.last_report
+    assert r.failures == [(0, 2.0)]
+    assert {p for p, _src, _ in r.redispatched} == {1, 2}
+    assert all(src_w == 0 and tgt == 1 for _, src_w, tgt in r.redispatched)
+    # worker 1: own pieces at t=1,2,3 then retries at t=4,5; the k-th
+    # (5th) distinct arrival is the first retry at t=4
+    assert r.t_complete == 4.0
+    np.testing.assert_allclose(np.asarray(y), src, rtol=1e-4, atol=1e-4)
+
+
+def test_redispatch_targets_deterministic_with_multiple_live_workers():
+    """Regression: re-dispatch target choice must read processed state, not
+    event-receipt order — with two live candidate workers, repeated
+    identical FakeClock runs must give one identical outcome."""
+    scheme = get_scheme("mds").make(6, 5)
+    src = np.random.default_rng(0).normal(size=(5, 8)).astype(np.float32)
+    coded = np.asarray(scheme.encode(jnp.asarray(src)))
+    seen = set()
+    for _ in range(25):
+        ex = CodedExecutor(3, clock=FakeClock(),
+                           delay_model=DeterministicDelay([1.0, 1.0, 100.0]),
+                           fault_plan=FaultPlan(dead=frozenset({0})))
+        y = ex.run(scheme, [lambda i=i: coded[i] for i in range(6)],
+                   assignment=[2, 2, 2])
+        r = ex.last_report
+        seen.add((r.t_complete, tuple(r.subset), tuple(r.redispatched),
+                  tuple(sorted(r.assignment.items()))))
+        np.testing.assert_allclose(np.asarray(y), src, rtol=1e-3, atol=1e-3)
+        ex.close()
+    assert len(seen) == 1, f"nondeterministic outcomes: {seen}"
+
+
+def test_all_workers_dead_raises():
+    scheme = get_scheme("uncoded").make(2)
+    coded = np.ones((2, 4), np.float32)
+    ex = _fake_executor(2, fault_plan=FaultPlan(dead=frozenset({0, 1})))
+    with pytest.raises(RuntimeError):
+        ex.run(scheme, [lambda i=i: coded[i] for i in range(2)])
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous workers: allocate_pieces routed through the pool
+# ---------------------------------------------------------------------------
+
+def test_hetero_assignment_routes_pieces_proportionally():
+    scheme = get_scheme("mds").make(8, 5)
+    src = np.random.default_rng(3).normal(size=(5, 12)).astype(np.float32)
+    coded = np.asarray(scheme.encode(jnp.asarray(src)))
+    speeds = [6.0, 1.0, 1.0]
+    counts = allocate_pieces(speeds, scheme.n)
+    # fast worker pays 1/6 the per-piece time: same service-rate ratio
+    ex = CodedExecutor(3, clock=FakeClock(),
+                       delay_model=DeterministicDelay([1.0 / 6.0, 1.0, 1.0]))
+    y = ex.run(scheme, [lambda i=i: coded[i] for i in range(scheme.n)],
+               speeds=speeds)
+    r = ex.last_report
+    # piece counts follow the measured speeds (largest-remainder split)
+    per_worker = [sum(1 for w in r.assignment.values() if w == v)
+                  for v in range(3)]
+    assert per_worker == counts == [6, 1, 1]
+    # the fast worker's serial pieces land at i/6 < 1.0, so decode happens
+    # before either slow worker finishes: k-th arrival is the fast
+    # worker's 5th piece at 5/6.
+    assert r.t_complete == pytest.approx(5.0 / 6.0)
+    np.testing.assert_allclose(np.asarray(y), src, rtol=1e-4, atol=1e-4)
+
+
+def test_executor_speeds_and_assignment_exclusive():
+    scheme = get_scheme("mds").make(4, 2)
+    ex = _fake_executor(2)
+    with pytest.raises(ValueError):
+        ex.run(scheme, [lambda: 0] * 4, speeds=[1, 1], assignment=[2, 2])
+
+
+# ---------------------------------------------------------------------------
+# pieces through coded_matmul + decodable_prefix unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_coded_matmul_executor_matches_inline():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(11, 6)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(6, 9)), jnp.float32)
+    code = get_scheme("mds").make(5, 3)
+    ex = _fake_executor(5)
+    y_ex = coded_matmul(x, w, code, executor=ex)
+    y_in = coded_matmul(x, w, code)
+    # equal piece times -> arrivals drain in (t, worker) order -> the
+    # consumed prefix is the canonical subset: bit-identical decode
+    assert ex.last_report.subset == code.default_subset()
+    np.testing.assert_array_equal(np.asarray(y_ex), np.asarray(y_in))
+
+
+def test_decodable_prefix_semantics():
+    mds = get_scheme("mds").make(5, 3)
+    assert decodable_prefix(mds, [4, 1]) is None
+    assert decodable_prefix(mds, [4, 1, 3]) == [4, 1, 3]
+    assert decodable_prefix(mds, [4, 1, 3, 0]) == [4, 1, 3]
+    unc = get_scheme("uncoded").make(3)
+    assert decodable_prefix(unc, [0, 2]) is None
+    assert decodable_prefix(unc, [0, 2, 1]) == [0, 2, 1]
+    rep = get_scheme("replication").make(4)  # k=2: rows 0,1 | copies 2,3
+    assert decodable_prefix(rep, [0, 2]) is None   # both are source row 0
+    assert decodable_prefix(rep, [0, 3]) == [0, 3]
+
+
+# ---------------------------------------------------------------------------
+# real clock: the saving is measured wall-clock, stragglers get cancelled
+# ---------------------------------------------------------------------------
+
+def test_real_clock_early_exit_wall_clock(conv_case):
+    spec, x, w, y_ref = conv_case
+    code = get_scheme("mds").make(5, 3)
+    # healthy pieces ~20ms, straggler 100x ~2s: coded must return well
+    # before the straggler would finish (generous CI margins)
+    ex = CodedExecutor(5, clock=RealClock(),
+                       delay_model=DeterministicDelay(0.02),
+                       fault_plan=FaultPlan(straggler={0: 100.0}))
+    y = coded_conv2d(x, w, code, spec, executor=ex)
+    r = ex.last_report
+    assert r.wall_s < 1.0, f"no early exit: wall {r.wall_s:.3f}s"
+    assert 0 not in r.subset and 0 in r.cancelled
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_engine_live_executor_matches_jitted_serving():
+    """Engine(executor=): the coded FFN GEMMs really run on the pool
+    (straggler excluded from the decode subset) and generations stay
+    token-identical to the jitted engines."""
+    from repro.models.model import ModelConfig
+    from repro.serving.engine import Engine, Request
+
+    cfg = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab=64, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, 64, 8, dtype=np.int32), max_new=4)
+            for i in range(2)]
+    plain = Engine(cfg, seed=0)
+    out_plain = plain.generate(reqs)
+    ex = _fake_executor(5, fault_plan=FaultPlan(straggler={2: 9.0}))
+    live = Engine(cfg, params=plain.params, coded=(5, 3), executor=ex)
+    out_live = live.generate(reqs)
+    r = ex.last_report
+    assert r is not None, "executor was bypassed (lax.scan regression)"
+    assert 2 not in r.subset          # the straggler's piece is never used
+    assert r.t_complete == 1.0        # decode at the k-th arrival
+    for a, b in zip(out_plain, out_live):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert 0.0 < b.first_token_s <= b.latency_s
+
+
+def test_pool_reusable_across_runs_and_epochs():
+    """A straggler still sleeping from run e must not pollute run e+1."""
+    scheme = get_scheme("mds").make(4, 2)
+    src = np.random.default_rng(11).normal(size=(2, 16)).astype(np.float32)
+    coded = np.asarray(scheme.encode(jnp.asarray(src)))
+    pool = WorkerPool(4, clock=RealClock(),
+                      delay_model=DeterministicDelay(0.005))
+    with CodedExecutor(pool=pool) as ex:
+        for trial in range(3):
+            # rotate which worker straggles; the cancelled sleeper from the
+            # previous run must be fenced off by the epoch counter
+            y = ex.run(scheme, [lambda i=i: coded[i] for i in range(4)],
+                       fault_plan=FaultPlan(straggler={trial: 60.0}))
+            r = ex.last_report
+            assert len(r.subset) == scheme.k
+            assert trial not in r.subset  # this run's straggler skipped
+            np.testing.assert_allclose(np.asarray(y), src,
+                                       rtol=1e-4, atol=1e-4)

@@ -1,0 +1,74 @@
+"""Per-request latency accounting in the serving engine (ISSUE 2 satellite).
+
+The seed bug: ``Completion.latency_s`` was each *chunk's* elapsed time, so
+a request queued behind earlier buckets under-reported its latency, and
+there was no first-token metric at all.  Pinned here: latencies are
+measured from the ``generate()`` call, per request.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.models.model import ModelConfig
+from repro.serving.engine import Completion, Engine, Request
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = ModelConfig(name="tiny", n_layers=2, d_model=32, n_heads=4,
+                      n_kv_heads=2, d_ff=64, vocab=128, dtype=jnp.float32)
+    return Engine(cfg, seed=0)
+
+
+def _reqs():
+    # two buckets (different prompt lengths) -> processed sequentially
+    return [Request(0, np.arange(4, dtype=np.int32), max_new=4),
+            Request(1, np.arange(7, dtype=np.int32), max_new=4)]
+
+
+def test_first_token_before_total(engine):
+    for c in engine.generate(_reqs()):
+        assert 0.0 < c.first_token_s <= c.latency_s
+
+
+def test_queued_bucket_includes_wait(engine):
+    c0, c1 = engine.generate(_reqs())
+    assert (c0.rid, c1.rid) == (0, 1)
+    # request 1 sits in the queue while request 0's bucket runs: its
+    # latency must include that wait, so it strictly exceeds request 0's
+    # total, and even its FIRST token lands after request 0 finished.
+    assert c1.latency_s > c0.latency_s
+    assert c1.first_token_s >= c0.latency_s
+
+
+def test_same_chunk_shares_timeline(engine):
+    # equal-length prompts batch into one chunk: identical timestamps
+    reqs = [Request(0, np.arange(5, dtype=np.int32), max_new=3),
+            Request(1, np.arange(5, dtype=np.int32), max_new=3)]
+    c0, c1 = engine.generate(reqs)
+    assert c0.latency_s == c1.latency_s
+    assert c0.first_token_s == c1.first_token_s
+
+
+def test_prefill_only_request(engine):
+    # max_new=0 must not crash and must still report sane latencies
+    (c,) = engine.generate([Request(0, np.arange(5, dtype=np.int32),
+                                    max_new=0)])
+    assert c.tokens.shape == (0,)
+    assert 0.0 < c.first_token_s <= c.latency_s
+
+
+def test_executor_requires_coded_mode():
+    from repro.dist import CodedExecutor, FakeClock
+
+    cfg = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab=64, dtype=jnp.float32)
+    with CodedExecutor(2, clock=FakeClock()) as ex:
+        with pytest.raises(ValueError, match="coded"):
+            Engine(cfg, executor=ex)  # no coded=(n, k): pool would idle
+
+
+def test_completion_defaults_keep_compat():
+    # older call sites construct Completion without first_token_s
+    c = Completion(0, np.zeros(1, np.int32), 1.0)
+    assert c.first_token_s == 0.0

@@ -1,0 +1,89 @@
+"""Property tests for core/hetero.py's proportional piece allocation (ISSUE 2).
+
+``allocate_pieces`` is the planner the executor routes heterogeneous
+assignments through (repro.dist.CodedExecutor ``speeds=``), so its
+invariants are load-bearing: counts must partition exactly n_pieces,
+stay non-negative, and respect the speed ordering.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hetero import allocate_pieces, simulate_hetero, worker_speed
+from repro.core.latency import SystemParams
+from repro.core.splitting import ConvSpec
+
+_SPEEDS = st.lists(st.floats(0.05, 100.0, allow_nan=False), min_size=1,
+                   max_size=12)
+
+
+@given(speeds=_SPEEDS, n_pieces=st.integers(1, 64))
+@settings(max_examples=300, deadline=None)
+def test_allocation_partitions_pieces(speeds, n_pieces):
+    counts = allocate_pieces(speeds, n_pieces)
+    assert len(counts) == len(speeds)
+    assert sum(counts) == n_pieces       # every piece assigned exactly once
+    assert all(c >= 0 for c in counts)   # the >= 0 floor
+
+
+@given(speeds=st.lists(st.integers(1, 1000), min_size=1, max_size=12),
+       n_pieces=st.integers(1, 64))
+@settings(max_examples=300, deadline=None)
+def test_allocation_monotone_in_speed(speeds, n_pieces):
+    """A strictly faster worker never receives fewer pieces.  (Integer
+    speeds keep proportional shares separated by >> float eps, so the
+    property is exact rather than up-to-roundoff.)"""
+    counts = allocate_pieces([float(s) for s in speeds], n_pieces)
+    for i, si in enumerate(speeds):
+        for j, sj in enumerate(speeds):
+            if si > sj:
+                assert counts[i] >= counts[j], (speeds, counts)
+
+
+@given(speeds=_SPEEDS, n_pieces=st.integers(1, 64))
+@settings(max_examples=100, deadline=None)
+def test_allocation_tracks_proportional_share(speeds, n_pieces):
+    """Largest-remainder: every count is within 1 of its exact share."""
+    counts = allocate_pieces(speeds, n_pieces)
+    share = np.asarray(speeds) / np.sum(speeds) * n_pieces
+    assert all(np.floor(s) <= c <= np.ceil(s)
+               for s, c in zip(share, counts))
+
+
+@given(
+    speed_mults=st.lists(st.floats(0.25, 4.0), min_size=2, max_size=6),
+    k=st.integers(2, 6),
+    extra=st.integers(0, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=50, deadline=None)
+def test_simulate_hetero_accepts_allocations(speed_mults, k, extra, seed):
+    """Consistency: any allocate_pieces output is a valid simulate_hetero
+    assignment (zero-count workers included) and yields a finite positive
+    latency."""
+    worker_params = [
+        SystemParams(mu_cmp=2e9 * m, theta_cmp=2e-10 / m)
+        for m in speed_mults
+    ]
+    speeds = [worker_speed(p) for p in worker_params]
+    n_pieces = k + extra
+    assignment = allocate_pieces(speeds, n_pieces)
+    spec = ConvSpec(c_in=4, c_out=8, h_in=10, w_in=20, kernel=3)
+    rng = np.random.default_rng(seed)
+    t = simulate_hetero(spec, min(k, spec.w_out), assignment, worker_params,
+                        rng)
+    assert np.isfinite(t) and t > 0.0
+
+
+def test_fast_worker_gets_the_most_pieces():
+    counts = allocate_pieces([10.0, 1.0, 1.0, 1.0], 13)
+    assert counts[0] == max(counts) == 10
+    assert sum(counts) == 13
+
+
+def test_rejects_assignment_below_k():
+    spec = ConvSpec(c_in=2, c_out=2, h_in=8, w_in=16, kernel=3)
+    with pytest.raises(AssertionError):
+        simulate_hetero(spec, k=4, assignment=[1, 2],
+                        worker_params=[SystemParams(), SystemParams()],
+                        rng=np.random.default_rng(0))

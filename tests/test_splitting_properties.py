@@ -1,0 +1,119 @@
+"""Hypothesis property tests for core/splitting.py eqs. (1)-(2) (ISSUE 2).
+
+Complements test_splitting.py's per-part checks with the *global*
+invariants the coded pipeline relies on:
+
+* the k output slices tile ``w_out`` exactly — no gaps, no overlaps —
+  with the ``w_out % k`` remainder staying on the master (footnote 2);
+* adjacent input partitions overlap by exactly the halo ``K - S`` (so
+  each partition is self-contained: workers never communicate);
+* a real conv over the partitions reconstructs the monolithic conv
+  column-for-column (the linearity the whole paper rests on).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.splitting import ConvSpec, plan_width_split
+
+# geometry strategy: exact specs where w_in = K + (w_out - 1) * S
+_GEOM = dict(
+    w_out=st.integers(2, 96),
+    kernel=st.sampled_from([1, 3, 5, 7]),
+    stride=st.sampled_from([1, 2, 3]),
+    k=st.integers(1, 12),
+)
+
+
+def _spec(w_out, kernel, stride):
+    return ConvSpec(c_in=2, c_out=3, h_in=kernel + 2, kernel=kernel,
+                    stride=stride, w_in=kernel + (w_out - 1) * stride)
+
+
+@given(**_GEOM)
+@settings(max_examples=200, deadline=None)
+def test_output_slices_tile_exactly(w_out, kernel, stride, k):
+    spec = _spec(w_out, kernel, stride)
+    k = min(k, w_out)
+    plan = plan_width_split(spec, k)
+    # no gaps, no overlaps: each output column is claimed exactly once
+    claims = np.zeros(w_out, dtype=int)
+    for p in plan.parts:
+        claims[p.a_o : p.b_o] += 1
+    if plan.remainder is not None:
+        claims[plan.remainder.a_o : plan.remainder.b_o] += 1
+    assert (claims == 1).all()
+
+
+@given(**_GEOM)
+@settings(max_examples=200, deadline=None)
+def test_adjacent_partitions_carry_exactly_the_halo(w_out, kernel, stride, k):
+    spec = _spec(w_out, kernel, stride)
+    k = min(k, w_out)
+    plan = plan_width_split(spec, k)
+    halo = kernel - stride
+    for a, b in zip(plan.parts, plan.parts[1:]):
+        # input ranges of adjacent slices overlap by exactly K - S
+        # (negative halo = strided gap: partitions skip input columns)
+        assert a.b_i - b.a_i == halo
+    # eq. (2) endpoints, so the halo is a consequence, not a coincidence
+    for p in plan.parts:
+        assert p.a_i == p.a_o * stride
+        assert p.b_i == (p.b_o - 1) * stride + kernel
+
+
+@given(**_GEOM)
+@settings(max_examples=200, deadline=None)
+def test_remainder_stays_on_master(w_out, kernel, stride, k):
+    spec = _spec(w_out, kernel, stride)
+    k = min(k, w_out)
+    plan = plan_width_split(spec, k)
+    rem = w_out % k
+    if rem == 0:
+        assert plan.remainder is None
+    else:
+        # footnote 2: the master keeps the mod(W_O, k) remainder locally —
+        # it is never one of the k coded subtasks
+        assert plan.remainder is not None
+        assert plan.remainder.w_out == rem
+        assert plan.remainder.a_o == k * (w_out // k)
+        assert plan.remainder.b_o == w_out
+        assert all(p.b_o <= plan.remainder.a_o for p in plan.parts)
+
+
+@given(w_out=st.integers(2, 24), kernel=st.sampled_from([1, 3, 5]),
+       stride=st.sampled_from([1, 2]), k=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_partitions_reconstruct_the_conv(w_out, kernel, stride, k, seed):
+    """Running the conv per input partition and concatenating the slices
+    reproduces the monolithic conv exactly (pure slicing: bit-identical)."""
+    import jax.numpy as jnp
+
+    from repro.core.coded_conv import conv2d
+
+    spec = _spec(w_out, kernel, stride)
+    k = min(k, w_out)
+    plan = plan_width_split(spec, k)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, spec.c_in, spec.h_in, spec.w_in)),
+                    jnp.float32)
+    w = jnp.asarray(rng.normal(size=(spec.c_out, spec.c_in, kernel, kernel)),
+                    jnp.float32)
+    y_ref = conv2d(x, w, stride)
+    parts = [conv2d(x[..., p.a_i : p.b_i], w, stride) for p in plan.parts]
+    if plan.remainder is not None:
+        r = plan.remainder
+        parts.append(conv2d(x[..., r.a_i : r.b_i], w, stride))
+    y = jnp.concatenate(parts, axis=-1)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+def test_halo_example_from_paper_geometry():
+    """Non-hypothesis smoke: K=3, S=1 -> adjacent partitions share 2 input
+    columns (the classic conv halo)."""
+    spec = _spec(w_out=12, kernel=3, stride=1)
+    plan = plan_width_split(spec, 4)
+    for a, b in zip(plan.parts, plan.parts[1:]):
+        shared = set(range(a.a_i, a.b_i)) & set(range(b.a_i, b.b_i))
+        assert len(shared) == 2
