@@ -9,6 +9,7 @@ from .common import Csv
 
 def main() -> None:
     from . import (
+        adaptive_replan,
         ext_hetero,
         fig4_overhead,
         fig5_scenario1,
@@ -33,6 +34,7 @@ def main() -> None:
         ("fig9", fig9_approx_gap.run),
         ("fig10", fig10_param_impact.run),
         ("ext_hetero", ext_hetero.run),
+        ("adaptive", adaptive_replan.run),
         ("kernels", kernels_micro.run),
         ("roofline", roofline.run),
         ("sim_speedup", sim_speedup.run),

@@ -8,6 +8,7 @@ Public API:
     latency     — shift-exponential latency model (eqs. 7-12)
     planner     — optimal splitting k*, k° (eq. 16, problem 13/17)
     runtime     — master/worker straggler & failure simulation (§V)
+    estimate    — online shift-exp (mu, theta) fitting from telemetry
 """
 from .coding import MDSCode, ReplicationCode, LTCode
 from .schemes import (
@@ -37,6 +38,12 @@ from .planner import (
     straggling_index_R,
     plan_layer,
 )
+from .estimate import (
+    ProfileBank,
+    WorkerProfile,
+    calibrated_params,
+    fit_shift_exp,
+)
 from .runtime import (
     SimScenario,
     simulate_layer,
@@ -56,6 +63,7 @@ __all__ = [
     "expected_latency_mc",
     "uncoded_latency", "uncoded_latency_mc", "replication_latency_mc",
     "straggling_index_R", "plan_layer",
+    "ProfileBank", "WorkerProfile", "calibrated_params", "fit_shift_exp",
     "SimScenario", "simulate_layer", "simulate_layer_batch",
     "simulate_network",
 ]

@@ -34,8 +34,20 @@ def worker_speed(p: SystemParams) -> float:
 
 
 def allocate_pieces(speeds: Sequence[float], n_pieces: int) -> list[int]:
-    """Proportional piece counts per worker (largest remainder method)."""
+    """Proportional piece counts per worker (largest remainder method).
+
+    Raises ``ValueError`` on NaN/inf/negative speeds or an all-zero fleet —
+    a silent NaN->int cast here used to return INT64_MIN piece counts that
+    the executor would only trip over much later.
+    """
     speeds = np.asarray(speeds, dtype=np.float64)
+    if speeds.size == 0:
+        raise ValueError("need at least one worker speed")
+    if not np.all(np.isfinite(speeds)) or np.any(speeds < 0):
+        raise ValueError(f"speeds must be finite and >= 0, got {speeds.tolist()}")
+    if speeds.sum() <= 0.0:
+        raise ValueError(
+            f"total worker speed must be positive, got {speeds.tolist()}")
     share = speeds / speeds.sum() * n_pieces
     base = np.floor(share).astype(int)
     rem = n_pieces - int(base.sum())
@@ -73,8 +85,10 @@ def simulate_hetero(
             arrivals.append(t + p.sen.scaled(s.n_sen).sample(rng))
     arrivals.sort()
     t_exec = arrivals[k - 1]
-    t_enc = master.master.scaled(s.n_enc / max(len(assignment), 1)
-                                 * n_pieces).sample(rng)
+    # s.n_enc (eq. 8) is 2*k*n'*row_in — it already scales with the piece
+    # count n', so it is charged as-is; rescaling by the *worker* count
+    # over-counted encode work whenever workers held more than one piece
+    t_enc = master.master.scaled(s.n_enc).sample(rng)
     t_dec = master.master.scaled(s.n_dec).sample(rng)
     rem = spec.w_out % k
     t_rem = (master.cmp.scaled(spec.subtask_flops(rem)).sample(rng)

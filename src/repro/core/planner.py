@@ -111,6 +111,10 @@ def k_circ(spec: ConvSpec, n: int, params: SystemParams,
            extra_exp: float = 0.0) -> int:
     """Approximate optimal k° (§IV-A): convex minimisation + rounding."""
     hi = min(n - 1e-6, float(spec.w_out))
+    if hi <= 1.0:
+        # the relaxed domain (1, hi) collapses (n == 1 or W_O <= 1): k = 1
+        # is the only feasible split — nothing to optimise
+        return 1
     res = optimize.minimize_scalar(
         lambda k: (L_continuous(spec, n, k, params)
                    + extra_exp * float(np.log(n / (n - k)))),
@@ -198,13 +202,72 @@ def k_star(
 # benchmarks: uncoded [8] and replication [15]
 # ---------------------------------------------------------------------------
 
+def _hypoexp_sf(u: float, rates: np.ndarray) -> float:
+    """P(X_1 + ... + X_m > u) for independent X_j ~ Exp(rates[j]).
+
+    Evaluated through the phase-type representation (survival = mass still
+    in a transient state of the sequential chain at time u), which is
+    numerically stable even when rates (near-)coincide — the textbook
+    partial-fraction formula cancels catastrophically there.
+    """
+    if u <= 0.0:
+        return 1.0
+    from scipy.linalg import expm
+
+    m = len(rates)
+    Q = np.zeros((m, m))
+    for j, r in enumerate(rates):
+        Q[j, j] = -r
+        if j + 1 < m:
+            Q[j, j + 1] = r
+    return float(np.clip(expm(Q * u)[0].sum(), 0.0, 1.0))
+
+
 def uncoded_latency(spec: ConvSpec, n: int, params: SystemParams) -> float:
     """Closed-form E[T^u(n)] (eq. 20): split into n, wait for all (k=n order
-    statistic == max), no encode/decode."""
-    s = phase_sizes(spec, n, n)
-    theta_sum = s.n_rec * params.theta_rec + s.n_cmp * params.theta_cmp + s.n_sen * params.theta_sen
-    mu_sum = s.n_rec / params.mu_rec + s.n_cmp / params.mu_cmp + s.n_sen / params.mu_sen
-    return theta_sum + mu_sum * harmonic(n)
+    statistic == max), no encode/decode.
+
+    Matches ``uncoded_latency_mc``'s uneven as-even-as-possible split: the
+    W_O mod n widest workers carry ceil(W_O/n) output columns, the rest
+    floor(W_O/n).  Each worker's round-trip is a *shifted hypoexponential*
+    (deterministic shift N·theta plus the sum of three independent
+    exponential phases, eq. 6), so the expectation of the max is evaluated
+    exactly as the integral of the joint survival function — not with the
+    even-split single-exponential surrogate, which overestimates by ~14%
+    on a 32-wide layer (see tests/test_planner.py).
+    """
+    from scipy import integrate
+
+    from .latency import sizes_for_width
+
+    n = min(n, spec.w_out)
+    w_floor, n_ceil = spec.w_out // n, spec.w_out % n
+    # distinct per-worker load groups: (count, shift, phase rates)
+    groups: list[tuple[int, float, np.ndarray]] = []
+    for width, count in ((w_floor + 1, n_ceil), (w_floor, n - n_ceil)):
+        if count == 0:
+            continue
+        s = sizes_for_width(spec, n, n, width)
+        shift = (s.n_rec * params.theta_rec + s.n_cmp * params.theta_cmp
+                 + s.n_sen * params.theta_sen)
+        rates = np.array([params.mu_rec / s.n_rec, params.mu_cmp / s.n_cmp,
+                          params.mu_sen / s.n_sen])
+        groups.append((count, shift, rates))
+
+    def surv_max(t: float) -> float:
+        prod = 1.0
+        for count, shift, rates in groups:
+            prod *= (1.0 - _hypoexp_sf(t - shift, rates)) ** count
+        return 1.0 - prod
+
+    # E[max] = ∫ P(max > t) dt; the integrand is exactly 1 below the
+    # smallest shift and decays like n·exp(-r_min t) past the largest
+    shifts = [g[1] for g in groups]
+    r_min = min(float(r.min()) for _, _, r in groups)
+    t_cap = max(shifts) + (40.0 + np.log(n + 1.0)) / r_min
+    tail, _ = integrate.quad(surv_max, min(shifts), t_cap,
+                             points=sorted(shifts), limit=200)
+    return float(min(shifts) + tail)
 
 
 def uncoded_latency_mc(

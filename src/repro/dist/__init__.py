@@ -7,12 +7,23 @@ on injected failures.  ``FakeClock`` + ``DeterministicDelay`` make every
 §V scenario a deterministic wall-clock-free test; ``RealClock`` makes the
 k-of-n saving measurable.
 """
+from .adaptive import AdaptiveExecutor, AdaptivePlan, AdaptivePlanner, gemm_spec
 from .clock import Clock, FakeClock, RealClock
 from .executor import CodedExecutor, decodable_prefix
-from .faults import DelayModel, DeterministicDelay, FaultPlan, ShiftExpDelay
-from .pool import Arrival, Piece, RunReport, WorkerPool
+from .faults import (
+    DelayModel,
+    DeterministicDelay,
+    FaultPlan,
+    ShiftExpDelay,
+    StragglerDrift,
+)
+from .pool import Arrival, Piece, PieceTiming, RunReport, WorkerPool
 
 __all__ = [
+    "AdaptiveExecutor",
+    "AdaptivePlan",
+    "AdaptivePlanner",
+    "gemm_spec",
     "Clock",
     "FakeClock",
     "RealClock",
@@ -21,9 +32,11 @@ __all__ = [
     "DelayModel",
     "DeterministicDelay",
     "FaultPlan",
+    "StragglerDrift",
     "ShiftExpDelay",
     "Arrival",
     "Piece",
+    "PieceTiming",
     "RunReport",
     "WorkerPool",
 ]

@@ -1,0 +1,223 @@
+"""Adaptive re-planning from live executor telemetry (ISSUE 3, DESIGN.md §8).
+
+Closes the loop the paper leaves open ("time-varying and possibly unknown"
+capacities, §I): every :class:`~repro.dist.pool.WorkerPool` run already
+records per-piece timings; this module fits them online
+(:mod:`repro.core.estimate`) and re-solves the split k° and the
+heterogeneous piece allocation *between requests*, so the plan follows the
+fleet as stragglers drift instead of serving a stale hand-fitted
+:class:`~repro.core.latency.SystemParams` forever.
+
+Telemetry -> fit -> re-plan:
+
+1. **observe** — :meth:`AdaptivePlanner.observe_report` normalizes each
+   piece's round-trip by its *prior mean* duration (shift + excess at the
+   run's phase sizes), feeding dimensionless per-unit samples into
+   per-worker EWMA-windowed profiles;
+2. **fit** — the pooled fleet fit yields per-unit (theta-hat, 1/mu-hat);
+   dividing by the prior's own per-unit decomposition gives two
+   calibration scales (shift and mean-excess), which rescale the prior's
+   worker phases (:func:`~repro.core.estimate.calibrated_params`) — a
+   stationary fleet calibrates to exactly 1.0 and recovers the prior;
+3. **re-plan** — k° is re-solved with the remainder-aware planner on the
+   calibrated parameters, and the per-worker piece allocation follows the
+   per-worker profile speeds (`hetero.allocate_pieces`), starving
+   drifting stragglers of work before the k-th-arrival cutoff ever has to
+   race them.
+
+:class:`AdaptiveExecutor` packages the loop behind the normal
+``CodedExecutor`` interface so `Engine(adaptive=True)` re-plans every
+coded GEMM: `models.model._matmul` asks :meth:`AdaptiveExecutor.plan_matmul`
+for the (possibly re-solved) scheme and assignment, and every completed
+run is observed automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Sequence
+
+import jax.numpy as jnp
+
+from ..core.estimate import (
+    ProfileBank,
+    calibrated_params,
+    round_trip_shift_excess,
+)
+from ..core.hetero import allocate_pieces
+from ..core.latency import PhaseSizes, SystemParams, phase_sizes
+from ..core.planner import k_circ_remainder_aware
+from ..core.schemes import CodingScheme
+from ..core.splitting import ConvSpec
+from .executor import CodedExecutor
+from .pool import RunReport
+
+__all__ = ["AdaptivePlan", "AdaptivePlanner", "AdaptiveExecutor", "gemm_spec"]
+
+
+def gemm_spec(n_tokens: int, d_in: int, d_out: int) -> ConvSpec:
+    """A GEMM as the K=S=1 degenerate conv (DESIGN.md §4): tokens play the
+    output width, so the planner's k° machinery applies unchanged."""
+    return ConvSpec(c_in=d_in, c_out=d_out, h_in=1, w_in=n_tokens, kernel=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptivePlan:
+    """One re-planning decision: the split and who runs how many pieces."""
+
+    k: int
+    n_pieces: int
+    assignment: list[int] | None   # per-worker counts; None = round-robin
+    params: SystemParams           # calibrated params the plan was solved on
+    from_telemetry: bool           # False while still running on the prior
+
+
+class AdaptivePlanner:
+    """Online (mu, theta) estimation + (k°, allocation) re-planning.
+
+    ``prior`` anchors the phase decomposition (telemetry only sees whole
+    round-trips) and serves verbatim until ``min_samples`` observations
+    per worker make the profiles trustworthy.  Thread-safe: the serving
+    engine observes and plans from its request loop while benchmarks may
+    inspect profiles concurrently.
+    """
+
+    def __init__(self, prior: SystemParams | None = None, *,
+                 window: int = 64, alpha: float = 0.25, min_samples: int = 8):
+        self.prior = prior if prior is not None else SystemParams()
+        self.bank = ProfileBank(window=window, alpha=alpha,
+                                min_samples=min_samples)
+        self._alpha = alpha
+        self._shift_frac: float | None = None  # EWMA prior shift fraction
+        self._lock = threading.Lock()
+
+    # -- telemetry ---------------------------------------------------------
+    def observe_report(self, report: RunReport, sizes: PhaseSizes) -> None:
+        """Ingest one run's per-piece timings, normalized by the prior mean
+        round-trip at the run's phase sizes (so profiles learned at one
+        split price plans at another)."""
+        shift, excess = round_trip_shift_excess(sizes, self.prior)
+        unit = shift + excess
+        if unit <= 0.0:
+            raise ValueError(f"degenerate prior round-trip for {sizes}")
+        with self._lock:
+            for t in report.timings:
+                self.bank.observe(t.worker, t.t_compute, units=unit)
+            rho = shift / unit
+            self._shift_frac = (rho if self._shift_frac is None else
+                                (1 - self._alpha) * self._shift_frac
+                                + self._alpha * rho)
+
+    @property
+    def ready(self) -> bool:
+        return self.bank.ready and self._shift_frac is not None
+
+    # -- fit ---------------------------------------------------------------
+    def params_hat(self) -> SystemParams:
+        """Prior rescaled by the fleet fit; the prior itself until ready."""
+        with self._lock:
+            if not self.ready:
+                return self.prior
+            fit = self.bank.fleet_fit()
+            rho = self._shift_frac
+        theta_scale = fit.theta / rho if rho > 0.0 else 1.0
+        excess_scale = (1.0 / fit.mu) / (1.0 - rho) if rho < 1.0 else 1.0
+        return calibrated_params(self.prior, theta_scale, excess_scale)
+
+    def speeds(self, n_workers: int) -> list[float]:
+        with self._lock:
+            return self.bank.speeds(n_workers)
+
+    # -- re-plan -----------------------------------------------------------
+    def plan(self, spec: ConvSpec, n_pieces: int, n_workers: int,
+             *, fixed_k: int | None = None) -> AdaptivePlan:
+        """Re-solve k° (remainder-aware) and the piece allocation from the
+        current profiles.  ``fixed_k`` pins the split (schemes whose k is
+        structural — replication, uncoded) so only the allocation adapts."""
+        params = self.params_hat()
+        if fixed_k is not None:
+            k = fixed_k
+        else:
+            k = k_circ_remainder_aware(spec, n_pieces, params)
+        assignment = None
+        if self.ready and n_workers > 0:
+            assignment = allocate_pieces(self.speeds(n_workers), n_pieces)
+        return AdaptivePlan(k=k, n_pieces=n_pieces, assignment=assignment,
+                            params=params, from_telemetry=self.ready)
+
+
+class AdaptiveExecutor(CodedExecutor):
+    """A ``CodedExecutor`` that re-plans before each run and learns after.
+
+    Drop-in for every ``executor=`` seam (`coded_conv2d`, `coded_matmul`,
+    `Engine`): runs behave identically until enough telemetry accumulates,
+    then piece assignments follow the live per-worker speeds.  The serving
+    path additionally re-solves k per coded GEMM via :meth:`plan_matmul`
+    (`models.model._matmul` duck-types on it).
+    """
+
+    def __init__(self, n_workers: int | None = None, *,
+                 planner: AdaptivePlanner | None = None,
+                 prior: SystemParams | None = None,
+                 probe_every: int = 8, **kw):
+        super().__init__(n_workers, **kw)
+        self.planner = planner if planner is not None else AdaptivePlanner(prior)
+        # every probe_every-th run gathers ALL pieces before decoding:
+        # k-of-n cancellation means a straggler never completes, so pure
+        # completion telemetry can never see it slow down (survivorship
+        # bias) — probes pay one run's early-exit saving to observe every
+        # worker's true service time.  0 disables probing.
+        self.probe_every = int(probe_every)
+        self.last_was_probe = False
+        self._runs = 0
+        self._pending_sizes: PhaseSizes | None = None
+
+    def arm_observation(self, sizes: PhaseSizes) -> None:
+        """Declare the next run's work content so its report feeds the
+        planner — callers that bypass :meth:`plan_matmul` (the conv path,
+        benchmarks) arm this before invoking ``coded_conv2d``."""
+        self._pending_sizes = sizes
+
+    def plan_matmul(self, scheme: CodingScheme, scheme_name: str,
+                    n_tokens: int, d_in: int, d_out: int
+                    ) -> tuple[int | None, Sequence[int] | None]:
+        """Re-plan one coded GEMM: returns (k or None to keep the scheme's,
+        per-worker assignment or None for round-robin) and arms the
+        post-run observation with this GEMM's phase sizes."""
+        spec = gemm_spec(n_tokens, d_in, d_out)
+        adapt_k = scheme_name in ("mds", "coded")  # k° is an MDS notion
+        plan = self.planner.plan(
+            spec, scheme.n, self.pool.n_workers,
+            fixed_k=None if adapt_k else scheme.k)
+        k = plan.k if adapt_k else None
+        self.arm_observation(phase_sizes(spec, scheme.n,
+                                         plan.k if adapt_k else scheme.k))
+        return k, plan.assignment
+
+    def run(self, scheme: CodingScheme,
+            piece_fns: Sequence[Callable[[], Any]], *,
+            assignment: Sequence[int] | None = None,
+            speeds: Sequence[float] | None = None,
+            sizes: PhaseSizes | None = None, **kw) -> jnp.ndarray:
+        """As ``CodedExecutor.run``; additionally plans the assignment from
+        live profiles when the caller gave none, and feeds the run's
+        timings back into the planner (``sizes`` — or the pending sizes a
+        ``plan_matmul`` call armed — tell it the work content)."""
+        if assignment is None and speeds is None and self.planner.ready:
+            assignment = allocate_pieces(
+                self.planner.speeds(self.pool.n_workers), scheme.n)
+        self._runs += 1
+        probe = self.probe_every > 0 and self._runs % self.probe_every == 0
+        if probe and assignment is not None and 0 in assignment:
+            # a probe must exercise every worker, including ones the
+            # current plan starves — otherwise a recovered straggler could
+            # never earn its pieces back; spread the probe round-robin
+            assignment = None
+        self.last_was_probe = probe
+        out = super().run(scheme, piece_fns, assignment=assignment,
+                          speeds=speeds, gather_all=probe, **kw)
+        observe = sizes if sizes is not None else self._pending_sizes
+        self._pending_sizes = None
+        if observe is not None and self.last_report is not None:
+            self.planner.observe_report(self.last_report, observe)
+        return out

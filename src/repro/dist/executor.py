@@ -90,12 +90,21 @@ class CodedExecutor:
         speeds: Sequence[float] | None = None,
         fault_plan: FaultPlan | None = None,
         delay_model: DelayModel | None = None,
+        gather_all: bool = False,
     ) -> jnp.ndarray:
         """Execute the n coded pieces, decode at the k-th arrival.
 
         ``piece_fns[i]`` computes coded piece i (all outputs same shape).
         Returns the decoded sources with shape ``(scheme.k,) + piece_shape``;
         the run's :class:`RunReport` lands in ``last_report``.
+
+        ``gather_all`` turns the run into a *probe*: the master waits for
+        every piece before decoding (still from the smallest decodable
+        prefix, so the result is identical), trading one run's early-exit
+        saving for telemetry on every worker — with k-of-n cancellation a
+        straggler never completes, so a completions-only estimator would
+        otherwise keep believing whatever it last saw (survivorship bias;
+        see dist/adaptive.py).
         """
         if len(piece_fns) != scheme.n:
             raise ValueError(
@@ -106,9 +115,15 @@ class CodedExecutor:
             from ..core.hetero import allocate_pieces
 
             assignment = allocate_pieces(speeds, scheme.n)
+        n_pieces = len(piece_fns)
+        if gather_all:
+            until = (lambda order: decodable_prefix(scheme, order)
+                     if len(order) >= n_pieces else None)
+        else:
+            until = lambda order: decodable_prefix(scheme, order)
         results, report = self.pool.run(
             piece_fns,
-            lambda order: decodable_prefix(scheme, order),
+            until,
             assignment=assignment,
             fault_plan=fault_plan,
             delay_model=delay_model,

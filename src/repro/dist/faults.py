@@ -34,6 +34,7 @@ from ..core.latency import PhaseSizes, SystemParams
 
 __all__ = [
     "FaultPlan",
+    "StragglerDrift",
     "DelayModel",
     "DeterministicDelay",
     "ShiftExpDelay",
@@ -56,6 +57,35 @@ class FaultPlan:
         if worker in self.dead:
             return 0
         return self.fail_at_piece.get(worker)
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerDrift:
+    """Piecewise straggler schedule across a *sequence* of pool runs.
+
+    One :class:`FaultPlan` scripts a single run; real capacities drift
+    over minutes (the paper's "time-varying and possibly unknown" premise,
+    §I).  ``phases`` is an ordered tuple of ``(first_request, FaultPlan)``
+    pairs; :meth:`plan_at` returns the plan governing request ``i`` —
+    fault-free before the first phase.  The adaptive-replanning benchmark
+    (benchmarks/adaptive_replan.py) drives its drifting-straggler scenario
+    through this.
+    """
+
+    phases: tuple = ()
+
+    def __post_init__(self):
+        firsts = [int(f) for f, _ in self.phases]
+        if firsts != sorted(firsts):
+            raise ValueError(f"phases must be ordered by first_request, "
+                             f"got starts {firsts}")
+
+    def plan_at(self, request: int) -> FaultPlan:
+        plan = FaultPlan()
+        for first, phase_plan in self.phases:
+            if request >= int(first):
+                plan = phase_plan
+        return plan
 
 
 @runtime_checkable

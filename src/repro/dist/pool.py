@@ -41,7 +41,7 @@ from typing import Any, Callable, Sequence
 from .clock import Clock, FakeClock, RealClock
 from .faults import DelayModel, FaultPlan
 
-__all__ = ["Piece", "Arrival", "RunReport", "WorkerPool"]
+__all__ = ["Piece", "Arrival", "PieceTiming", "RunReport", "WorkerPool"]
 
 _STOP = object()
 _MIN_DUR = 1e-9  # keeps per-worker virtual timelines strictly increasing
@@ -63,6 +63,24 @@ class Arrival:
     t: float  # virtual seconds from run start (== modeled wall in real mode)
 
 
+@dataclasses.dataclass(frozen=True)
+class PieceTiming:
+    """Phase telemetry of one completed piece — the estimator's raw feed.
+
+    ``t_dispatch`` is the virtual time the worker began serving the piece
+    (after its queue wait and any ``not_before`` gate), ``t_compute`` the
+    modeled service duration (the full rec+cmp+sen round-trip in delay-model
+    mode, the measured compute time in measured mode), and
+    ``t_arrival = t_dispatch + t_compute`` its completion at the master.
+    """
+
+    worker: int
+    piece: int
+    t_dispatch: float
+    t_compute: float
+    t_arrival: float
+
+
 @dataclasses.dataclass
 class RunReport:
     """What one pool run did — the executor's evidence trail."""
@@ -75,6 +93,7 @@ class RunReport:
     redispatched: list[tuple[int, int, int]]  # (piece, from_w, to_w)
     cancelled: list[int]              # piece ids dispatched but never consumed
     assignment: dict[int, int]        # piece id -> worker that produced it
+    timings: list[PieceTiming] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -99,6 +118,7 @@ class _Event:
     piece: int
     t: float
     payload: Any = None
+    t_start: float = 0.0  # virtual time the worker began serving the piece
 
 
 @dataclasses.dataclass
@@ -210,13 +230,14 @@ class WorkerPool:
                 failed = True
                 continue
             dur = self._duration(ctx, w, piece, measured=elapsed)
-            t_fin = max(t_free, piece.not_before) + dur
+            t_start = max(t_free, piece.not_before)
+            t_fin = t_start + dur
             t_free, done = t_fin, done + 1
             if not ctx.clock.virtual:
                 if not self._sleep_until(ctx, t_fin):
                     continue  # cancelled mid-sleep: drop the late result
             ctx.post(_Event("arrival", ctx.epoch, w, piece.idx, t_fin,
-                            payload=result))
+                            payload=result, t_start=t_start))
 
     def _duration(self, ctx: _RunCtx, w: int, piece: Piece, *,
                   measured: float | None = None) -> float:
@@ -375,6 +396,8 @@ class WorkerPool:
             if ev.piece not in st.order:
                 st.order.append(ev.piece)
                 report.arrivals.append(Arrival(ev.worker, ev.piece, ev.t))
+                report.timings.append(PieceTiming(
+                    ev.worker, ev.piece, ev.t_start, ev.t - ev.t_start, ev.t))
                 subset = until(list(st.order))
                 if subset is not None:
                     report.subset = list(subset)

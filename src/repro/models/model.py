@@ -284,8 +284,19 @@ def _matmul(cfg: ModelConfig, x: jax.Array, w: jax.Array) -> jax.Array:
             # order (and thus the decode subset) is data-dependent
             ex = current_executor()
             if ex is not None and not isinstance(x, jax.core.Tracer):
+                assignment = None
+                if hasattr(ex, "plan_matmul"):
+                    # adaptive serving: the executor re-solves k° and the
+                    # per-worker piece allocation from live telemetry
+                    # before every coded GEMM (dist/adaptive.py)
+                    k_new, assignment = ex.plan_matmul(
+                        code, cfg.coded_scheme, flat.shape[0],
+                        flat.shape[1], w.shape[-1])
+                    if k_new is not None and k_new != code.k:
+                        code = _coded_scheme(cfg.coded_scheme, cfg.coded_n,
+                                             k_new)
                 y = coded_matmul(flat, w.astype(jnp.float32), code,
-                                 executor=ex)
+                                 executor=ex, assignment=assignment)
             else:
                 y = coded_matmul(flat, w.astype(jnp.float32), code)
             return y.reshape(*shape[:-1], w.shape[-1]).astype(x.dtype)

@@ -14,7 +14,10 @@ coded FFN GEMMs, decoding each at the k-th arrival and cancelling
 stragglers (DESIGN.md §7).  The model then runs eagerly (no jit — arrival
 order is data-dependent), so this mode trades throughput for real
 straggler tolerance; it is the serving-path analogue of the paper's
-testbed.
+testbed.  ``adaptive=True`` additionally closes the telemetry loop
+(DESIGN.md §8): every coded GEMM re-solves k° and the per-worker piece
+allocation from live (mu, theta) profiles fitted on the pool's per-piece
+timings, so serving re-plans per layer as stragglers drift.
 
 Latency accounting is per request: ``latency_s`` measures from the
 ``generate()`` call to that request's last token (so requests queued
@@ -56,7 +59,7 @@ class Completion:
 class Engine:
     def __init__(self, cfg: ModelConfig, params=None, *, coded: tuple | None = None,
                  scheme: str | None = None, max_batch: int = 8, seed: int = 0,
-                 executor=None):
+                 executor=None, adaptive: bool = False, adaptive_prior=None):
         # scheme=None means "whatever cfg.coded_scheme says" — a default of
         # "mds" would silently clobber a config that chose another scheme
         if scheme is not None:
@@ -70,6 +73,27 @@ class Engine:
             # cfg may already enable coding (coded_n > 0): honour the
             # requested scheme rather than silently keeping cfg's
             cfg = dataclasses.replace(cfg, coded_scheme=scheme)
+        if adaptive:
+            if executor is None:
+                raise ValueError(
+                    "adaptive=True needs an executor= worker pool: the "
+                    "adaptive loop learns from live run telemetry "
+                    "(dist/adaptive.py), which only the pool produces")
+            from ..dist.adaptive import AdaptiveExecutor
+
+            if isinstance(executor, AdaptiveExecutor):
+                if adaptive_prior is not None:
+                    raise ValueError(
+                        "executor is already an AdaptiveExecutor with its "
+                        "own planner prior; pass adaptive_prior via "
+                        "AdaptiveExecutor(prior=...) instead (silently "
+                        "dropping it here would calibrate against the "
+                        "wrong prior)")
+            else:
+                # wrap the caller's pool: every coded GEMM now re-plans k°
+                # and the piece allocation from the live worker profiles
+                executor = AdaptiveExecutor(pool=executor.pool,
+                                            prior=adaptive_prior)
         if executor is not None:
             if not cfg.coded_n:
                 raise ValueError(

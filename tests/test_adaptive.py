@@ -1,0 +1,178 @@
+"""Adaptive re-planning tests (ISSUE 3): telemetry -> fit -> re-plan.
+
+Covers the planner's convergence to the static plan under stationary
+parameters, straggler starvation in the piece allocation, and the
+end-to-end `Engine(adaptive=True)` serving path on a deterministic clock.
+"""
+import numpy as np
+import pytest
+
+from repro.core.latency import SystemParams, phase_sizes
+from repro.core.planner import k_circ_remainder_aware
+from repro.core.splitting import ConvSpec
+from repro.dist import AdaptivePlanner, PieceTiming, RunReport
+
+SPEC = ConvSpec(c_in=16, c_out=16, h_in=32, w_in=34, kernel=3)
+N = 8
+
+
+def _report(timings):
+    return RunReport(0.0, 0.0, [], [], [], [], [], {}, timings=timings)
+
+
+def _feed_synthetic(planner, prior, *, requests, slow=None, rng=None,
+                    k=None):
+    """Feed per-piece round-trips sampled from the prior's true phase
+    distributions; ``slow`` maps worker -> duration multiplier."""
+    rng = rng or np.random.default_rng(0)
+    slow = slow or {}
+    k = k or k_circ_remainder_aware(SPEC, N, prior)
+    sizes = phase_sizes(SPEC, N, k)
+    for _ in range(requests):
+        timings = []
+        for w in range(N):
+            t = float(prior.rec.scaled(sizes.n_rec).sample(rng)
+                      + prior.cmp.scaled(sizes.n_cmp).sample(rng)
+                      + prior.sen.scaled(sizes.n_sen).sample(rng))
+            t *= slow.get(w, 1.0)
+            timings.append(PieceTiming(w, w, 0.0, t, t))
+        planner.observe_report(_report(timings), sizes)
+    return sizes
+
+
+class TestAdaptivePlanner:
+    def test_serves_prior_until_ready(self):
+        prior = SystemParams()
+        pl = AdaptivePlanner(prior, min_samples=8)
+        plan = pl.plan(SPEC, N, N)
+        assert not plan.from_telemetry
+        assert plan.params == prior
+        assert plan.assignment is None  # round-robin until telemetry lands
+        assert plan.k == k_circ_remainder_aware(SPEC, N, prior)
+
+    def test_stationary_telemetry_converges_to_static_plan(self):
+        """Acceptance criterion: when the fleet actually follows the prior,
+        the adaptive planner re-solves to the same k° as the static
+        planner, and the allocation stays balanced."""
+        prior = SystemParams()
+        pl = AdaptivePlanner(prior, window=64, min_samples=8)
+        _feed_synthetic(pl, prior, requests=40)
+        plan = pl.plan(SPEC, N, N)
+        assert plan.from_telemetry
+        assert plan.k == k_circ_remainder_aware(SPEC, N, prior)
+        assert max(plan.assignment) - min(plan.assignment) <= 1
+        # and the calibration is near-identity, not accidentally loose
+        ph = pl.params_hat()
+        assert abs(ph.theta_cmp / prior.theta_cmp - 1.0) < 0.25
+        assert abs(prior.mu_cmp / ph.mu_cmp - 1.0) < 0.25
+
+    def test_straggler_starved_of_pieces(self):
+        """A worker drifting 8x slower must end up with far less than its
+        fair share once its profile window has turned over."""
+        prior = SystemParams()
+        pl = AdaptivePlanner(prior, window=32, min_samples=8)
+        _feed_synthetic(pl, prior, requests=16)
+        _feed_synthetic(pl, prior, requests=40, slow={0: 8.0},
+                        rng=np.random.default_rng(1))
+        plan = pl.plan(SPEC, N, N)
+        fair = N // N
+        assert plan.assignment[0] < fair or plan.assignment[0] == 0
+        assert plan.assignment[0] == min(plan.assignment)
+        assert sum(plan.assignment) == N
+
+    def test_fleetwide_slowdown_recalibrates_params(self):
+        """If every worker doubles its round-trip, the calibrated params
+        must double the worker phase costs (and leave the master alone)."""
+        prior = SystemParams()
+        pl = AdaptivePlanner(prior, window=64, min_samples=8)
+        _feed_synthetic(pl, prior, requests=40,
+                        slow={w: 2.0 for w in range(N)})
+        ph = pl.params_hat()
+        mean_scale = (ph.theta_cmp / prior.theta_cmp
+                      + prior.mu_cmp / ph.mu_cmp) / 2.0
+        assert 1.5 < mean_scale < 2.5
+        assert ph.mu_m == prior.mu_m
+
+    def test_fixed_k_only_adapts_allocation(self):
+        prior = SystemParams()
+        pl = AdaptivePlanner(prior, window=32, min_samples=8)
+        _feed_synthetic(pl, prior, requests=20, slow={0: 8.0})
+        plan = pl.plan(SPEC, N, N, fixed_k=3)
+        assert plan.k == 3
+        assert plan.assignment[0] == min(plan.assignment)
+
+
+class TestAdaptiveExecutor:
+    def test_observes_runs_and_reallocates(self):
+        """Direct executor path: deterministic per-worker delays, one
+        worker 6x slow.  k-of-n cancellation hides stragglers from pure
+        completion telemetry (they never finish), so the executor's
+        periodic gather-all probes are what surface worker 3's slowness;
+        after a couple of probes the auto-assignment starves it."""
+        import jax.numpy as jnp
+
+        from repro.core.schemes import get_scheme
+        from repro.dist import AdaptiveExecutor, DeterministicDelay, FakeClock
+
+        scheme = get_scheme("mds").make(4, 2)
+        sizes = phase_sizes(ConvSpec(4, 4, 8, 10, 3), 4, 2)
+        with AdaptiveExecutor(
+                4, prior=SystemParams(), probe_every=4, clock=FakeClock(),
+                delay_model=DeterministicDelay([1.0, 1.0, 1.0, 6.0])) as ex:
+            ex.planner.bank.min_samples = 2
+            for _ in range(10):  # probes at runs 4 and 8; run 10 re-plans
+                ex.run(scheme,
+                       [lambda i=i: jnp.full((2, 2), float(i))
+                        for i in range(4)],
+                       sizes=sizes)
+            counts = [0, 0, 0, 0]
+            for w in ex.last_report.assignment.values():
+                counts[w] += 1
+            assert counts[3] == 0, counts  # the 6x worker holds no pieces
+            # probes observed the straggler's true service time
+            assert ex.planner.bank.profiles[3].n_observed >= 2
+        assert ex.planner.ready
+
+    def test_engine_adaptive_requires_executor(self):
+        import jax.numpy as jnp
+
+        from repro.models.model import ModelConfig
+        from repro.serving.engine import Engine
+
+        cfg = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                          n_kv_heads=2, d_ff=64, vocab=128,
+                          dtype=jnp.float32)
+        with pytest.raises(ValueError, match="adaptive"):
+            Engine(cfg, coded=(4, 2), scheme="mds", adaptive=True)
+
+    def test_engine_adaptive_serving_end_to_end(self):
+        """Engine(adaptive=True) on a FakeClock pool: generated tokens
+        match the plain in-line engine exactly (decode stays exact while
+        re-planning), and the straggling worker is starved of pieces once
+        its profile is learned."""
+        import jax.numpy as jnp
+
+        from repro.dist import CodedExecutor, DeterministicDelay, FakeClock
+        from repro.models.model import ModelConfig
+        from repro.serving.engine import Engine, Request
+
+        cfg = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                          n_kv_heads=2, d_ff=64, vocab=128,
+                          dtype=jnp.float32)
+        reqs = [Request(i, np.arange(6, dtype=np.int32), max_new=2)
+                for i in range(6)]
+        ref = Engine(cfg, coded=(4, 2), scheme="mds", seed=0).generate(reqs)
+        ex = CodedExecutor(4, clock=FakeClock(),
+                           delay_model=DeterministicDelay([1., 1., 1., 6.]))
+        eng = Engine(cfg, coded=(4, 2), scheme="mds", seed=0, executor=ex,
+                     adaptive=True)
+        eng.executor.probe_every = 3
+        eng.executor.planner.bank.min_samples = 4
+        out = eng.generate(reqs)
+        for a, b in zip(ref, out):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert eng.executor.planner.ready
+        counts = [0, 0, 0, 0]
+        for w in eng.executor.last_report.assignment.values():
+            counts[w] += 1
+        assert counts[3] == min(counts), counts

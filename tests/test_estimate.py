@@ -1,0 +1,153 @@
+"""Estimator tests (ISSUE 3): shift-exponential MLE recovery, EWMA drift
+tracking, and the SystemParams calibration bridge."""
+import numpy as np
+import pytest
+
+from repro.core.estimate import (
+    ProfileBank,
+    WorkerProfile,
+    calibrated_params,
+    fit_shift_exp,
+    round_trip_shift_excess,
+)
+from repro.core.latency import ShiftExp, SystemParams, phase_sizes
+from repro.core.splitting import ConvSpec
+
+
+class TestFitShiftExp:
+    @pytest.mark.parametrize("mu,theta,units", [
+        (4.0, 0.8, 1.0),
+        (0.5, 2.0, 1.0),
+        (2e9, 2e-10, 1.0),   # SystemParams-scale per-FLOP coefficients
+        (4.0, 0.8, 3.0),     # durations observed at work content N=3
+    ])
+    def test_recovers_known_params_within_10pct_at_500(self, mu, theta, units):
+        """Acceptance criterion: (mu, theta) recovered to within 10% from
+        500 synthetic ShiftExp samples."""
+        rng = np.random.default_rng(7)
+        samples = ShiftExp(mu, theta).scaled(units).sample(rng, (500,))
+        fit = fit_shift_exp(samples, units=units)
+        assert abs(fit.mu - mu) / mu < 0.10, fit
+        assert abs(fit.theta - theta) / theta < 0.10, fit
+
+    def test_theta_from_minimum_mu_from_excess_mean(self):
+        """The uncorrected MLE is exactly (min, 1/mean-excess)."""
+        samples = [1.0, 1.5, 3.0, 2.5]
+        fit = fit_shift_exp(samples, bias_correct=False)
+        assert fit.theta == 1.0
+        assert fit.mu == pytest.approx(1.0 / (np.mean(samples) - 1.0))
+
+    def test_bias_correction_beats_raw_mle_on_theta(self):
+        """E[min] = theta + 1/(m mu): the raw minimum is biased high; the
+        corrected estimator must land closer on average."""
+        rng = np.random.default_rng(3)
+        raw_err, corr_err = 0.0, 0.0
+        for _ in range(200):
+            s = ShiftExp(2.0, 1.0).scaled(1.0).sample(rng, (30,))
+            raw_err += abs(fit_shift_exp(s, bias_correct=False).theta - 1.0)
+            corr_err += abs(fit_shift_exp(s).theta - 1.0)
+        assert corr_err < raw_err
+
+    def test_identical_samples_stay_finite(self):
+        """Deterministic delays (zero excess) must not produce inf/nan."""
+        fit = fit_shift_exp([2.0, 2.0, 2.0, 2.0])
+        assert np.isfinite(fit.mu) and fit.mu > 0.0
+        assert fit.theta == pytest.approx(2.0, rel=1e-6)
+
+    @pytest.mark.parametrize("bad", [[], [1.0], [1.0, np.nan], [1.0, np.inf]])
+    def test_rejects_degenerate_input(self, bad):
+        with pytest.raises(ValueError):
+            fit_shift_exp(bad)
+
+
+class TestWorkerProfile:
+    def test_ewma_tracks_step_change_within_window(self):
+        """A step change in mu (2 -> 8, capacity drifts) must be tracked
+        once the window has turned over: after `window` post-step samples
+        the estimate sits much closer to the new rate than the old one."""
+        rng = np.random.default_rng(11)
+        p = WorkerProfile(window=32, alpha=0.3)
+        for _ in range(128):
+            p.observe(float(ShiftExp(2.0, 0.5).scaled(1.0).sample(rng)))
+        mu_before = p.mu
+        assert abs(mu_before - 2.0) / 2.0 < 0.6
+        for _ in range(32):
+            p.observe(float(ShiftExp(8.0, 0.5).scaled(1.0).sample(rng)))
+        assert abs(p.mu - 8.0) < abs(p.mu - 2.0)   # closer to the new regime
+        assert abs(p.mu - 8.0) / 8.0 < 0.35
+        # theta did not drift (the step was in mu only)
+        assert abs(p.theta - 0.5) / 0.5 < 0.25
+
+    def test_mean_step_moves_speed(self):
+        """A 6x slowdown in observed durations cuts speed() ~6x — the
+        allocation currency the adaptive planner consumes."""
+        p = WorkerProfile(window=16, alpha=0.5, min_samples=4)
+        for _ in range(16):
+            p.observe(1.0)
+        fast = p.speed()
+        for _ in range(16):
+            p.observe(6.0)
+        assert fast / p.speed() == pytest.approx(6.0, rel=0.2)
+
+    def test_not_ready_until_min_samples(self):
+        p = WorkerProfile(window=8, min_samples=4)
+        for i in range(3):
+            p.observe(1.0 + i)
+            assert not p.ready
+        p.observe(4.0)
+        assert p.ready
+
+    @pytest.mark.parametrize("dur,units", [(-1.0, 1.0), (np.nan, 1.0),
+                                           (1.0, 0.0)])
+    def test_rejects_bad_observations(self, dur, units):
+        p = WorkerProfile()
+        with pytest.raises(ValueError):
+            p.observe(dur, units)
+
+
+class TestProfileBank:
+    def test_unobserved_workers_default_to_median_speed(self):
+        bank = ProfileBank(window=8, min_samples=2)
+        for _ in range(8):
+            bank.observe(0, 1.0)
+            bank.observe(1, 2.0)
+        s = bank.speeds(4)
+        med = float(np.median([s[0], s[1]]))
+        assert s[2] == s[3] == pytest.approx(med)
+        assert s[0] > s[1]  # worker 0's pieces took half the time
+
+    def test_fleet_fit_pools_all_windows(self):
+        rng = np.random.default_rng(5)
+        bank = ProfileBank(window=64, min_samples=2)
+        for w in range(4):
+            for _ in range(64):
+                bank.observe(w, float(ShiftExp(3.0, 1.0).scaled(1.0)
+                                      .sample(rng)))
+        fit = bank.fleet_fit()
+        assert abs(fit.mu - 3.0) / 3.0 < 0.10
+        assert abs(fit.theta - 1.0) < 0.05
+
+
+class TestCalibration:
+    def test_unit_scales_return_prior_exactly(self):
+        prior = SystemParams()
+        assert calibrated_params(prior, 1.0, 1.0) == prior
+
+    def test_scales_worker_phases_only(self):
+        prior = SystemParams()
+        p = calibrated_params(prior, 2.0, 4.0)
+        assert p.theta_cmp == prior.theta_cmp * 2.0
+        assert p.mu_cmp == prior.mu_cmp / 4.0
+        assert p.mu_m == prior.mu_m and p.theta_m == prior.theta_m
+
+    def test_round_trip_decomposition_matches_mean(self):
+        """shift + excess must equal the analytic mean round-trip."""
+        spec = ConvSpec(c_in=8, c_out=8, h_in=16, w_in=18, kernel=3)
+        prior = SystemParams()
+        s = phase_sizes(spec, 8, 4)
+        shift, excess = round_trip_shift_excess(s, prior)
+        mean = (prior.rec.scaled(s.n_rec).mean()
+                + prior.cmp.scaled(s.n_cmp).mean()
+                + prior.sen.scaled(s.n_sen).mean())
+        assert shift + excess == pytest.approx(mean, rel=1e-12)
+        assert shift > 0.0 and excess > 0.0

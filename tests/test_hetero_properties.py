@@ -87,3 +87,75 @@ def test_rejects_assignment_below_k():
         simulate_hetero(spec, k=4, assignment=[1, 2],
                         worker_params=[SystemParams(), SystemParams()],
                         rng=np.random.default_rng(0))
+
+
+class TestAllocationDegenerateSpeeds:
+    """ISSUE-3 regression: a NaN -> int cast used to return INT64_MIN piece
+    counts for zero/NaN speed vectors instead of raising."""
+
+    @pytest.mark.parametrize("speeds", [
+        [0.0, 0.0], [0.0], [np.nan, 1.0], [float("inf"), 1.0],
+        [-1.0, 2.0], [],
+    ])
+    def test_rejects_nonpositive_total_and_bad_entries(self, speeds):
+        with pytest.raises(ValueError):
+            allocate_pieces(speeds, 8)
+
+    def test_zero_speed_worker_among_live_ones_is_fine(self):
+        """Individual zero speeds are legitimate (a dead worker): only an
+        all-zero fleet is an error."""
+        assert allocate_pieces([0.0, 1.0, 1.0], 8) == [0, 4, 4]
+
+
+class TestHeteroEncodeScaling:
+    """ISSUE-3 regression: encode FLOPs were rescaled by n_pieces/len(
+    assignment), over-counting 4x for assignment [4, 4] — but s.n_enc
+    (eq. 8) already carries the piece-count factor n'."""
+
+    def test_encode_work_independent_of_worker_count(self):
+        """Same 8 coded pieces grouped as 2/4/8 workers must charge the
+        same master encode work.  Exponential tails are suppressed
+        (mu -> 1e30) and worker shifts zeroed, so the latency reduces to
+        the deterministic master encode+decode shift, which only the
+        piece count may scale."""
+        spec = ConvSpec(c_in=16, c_out=16, h_in=32, w_in=34, kernel=3)
+        det = SystemParams(mu_m=1e30, theta_m=1e-10, mu_cmp=1e30,
+                           theta_cmp=0.0, mu_rec=1e30, theta_rec=0.0,
+                           mu_sen=1e30, theta_sen=0.0)
+        rng = np.random.default_rng(0)
+        lat = [simulate_hetero(spec, 4, assignment, [det] * len(assignment),
+                               rng, master=det)
+               for assignment in ([4, 4], [2, 2, 2, 2], [1] * 8)]
+        np.testing.assert_allclose(lat, lat[0], rtol=1e-6)
+
+    def test_hetero_latency_matches_homogeneous_mds_model(self):
+        """With equal workers, one piece each, simulate_hetero reduces to
+        the planner's homogeneous MC model (same n, k) — the two
+        independent models must agree to sampling noise."""
+        from repro.core.planner import expected_latency_mc
+
+        spec = ConvSpec(c_in=16, c_out=16, h_in=32, w_in=34, kernel=3)
+        p = SystemParams()
+        n, k = 8, 5
+        rng = np.random.default_rng(1)
+        trials = np.array([
+            simulate_hetero(spec, k, [1] * n, [p] * n, rng, master=p)
+            for _ in range(4000)
+        ])
+        mc = expected_latency_mc(spec, n, k, p, samples=20_000)
+        assert abs(trials.mean() - mc) / mc < 0.03, (trials.mean(), mc)
+
+    def test_grouped_pieces_cost_at_most_the_serial_penalty(self):
+        """[2]*4 runs each worker's two pieces back-to-back: its mean must
+        sit above the fully parallel [1]*8 run but below 2x (the serial
+        worst case) plus the shared master terms.  A 2x encode over-count
+        on the grouped assignment used to break the upper bound's
+        master-side slack."""
+        spec = ConvSpec(c_in=16, c_out=16, h_in=32, w_in=34, kernel=3)
+        p = SystemParams()
+        rng = np.random.default_rng(2)
+        grouped = np.mean([simulate_hetero(spec, 5, [2] * 4, [p] * 4, rng,
+                                           master=p) for _ in range(3000)])
+        flat = np.mean([simulate_hetero(spec, 5, [1] * 8, [p] * 8, rng,
+                                        master=p) for _ in range(3000)])
+        assert flat <= grouped <= 2.0 * flat, (flat, grouped)
