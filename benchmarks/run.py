@@ -18,6 +18,7 @@ def main() -> None:
         fig9_approx_gap,
         fig10_param_impact,
         kernels_micro,
+        pipeline_depth,
         roofline,
         sim_speedup,
         table1_k_approx,
@@ -35,6 +36,7 @@ def main() -> None:
         ("fig10", fig10_param_impact.run),
         ("ext_hetero", ext_hetero.run),
         ("adaptive", adaptive_replan.run),
+        ("pipeline", pipeline_depth.run),
         ("kernels", kernels_micro.run),
         ("roofline", roofline.run),
         ("sim_speedup", sim_speedup.run),

@@ -1,39 +1,59 @@
-"""End-to-end CoCoI CNN inference + straggler simulation.
+"""End-to-end CoCoI CNN inference through the network-level plan compiler.
 
-1. Runs a small CNN where every type-1 conv executes through the coded
-   pipeline and checks the logits match local inference bit-for-bit-ish.
-2. Simulates the paper's scenario-2 (device failures) on VGG16 and prints
+1. Compiles the small CNN into coded segments (core/netplan.py) under a
+   few schemes and checks the segment-pipelined logits match local
+   inference, while counting the master encode/decode boundary ops the
+   run actually performs (2 per segment, not 2 per layer).
+2. Compiles VGG16 and prints the per-layer vs segment plan structure:
+   boundary ops, master<->worker transfer bytes, modeled latency.
+3. Simulates the paper's scenario-2 (device failures) on VGG16 and prints
    the latency comparison CoCoI vs uncoded vs replication.
 
 Run: PYTHONPATH=src python examples/coded_cnn_inference.py
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import MDSCode, SystemParams, SimScenario
+from repro.core import SystemParams, SimScenario, compile_plan, k_circ
+from repro.core.coded_conv import boundary_op_counter
 from repro.core.runtime import simulate_network
 from repro.models import init_small_cnn, small_cnn_forward
-from repro.models.cnn import vgg16_conv_specs
+from repro.models.cnn import SMALL_CNN_PARAMS, small_cnn_layers, vgg16_conv_specs
 
-# --- 1. numerical end-to-end: coded CNN == local CNN --------------------
+# --- 1. numerical end-to-end: segment-compiled CNN == local CNN ----------
 params = init_small_cnn(jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 32, 32), jnp.float32)
 logits_local = small_cnn_forward(params, x)
-code = MDSCode(n=6, k=4)
-logits_coded = small_cnn_forward(params, x, code=code, subset=[1, 2, 4, 5])
-err = float(jnp.max(jnp.abs(logits_coded - logits_local)))
-print(f"coded CNN inference matches local: max abs err = {err:.2e}")
-same = bool((jnp.argmax(logits_coded, -1) == jnp.argmax(logits_local, -1)).all())
-print(f"predicted classes identical: {same}")
 
-# --- 2. latency simulation on VGG16 under failures ----------------------
+layers = small_cnn_layers(32)
+for scheme in ("mds", "replication", "uncoded"):
+    plan = compile_plan(layers, 6, SMALL_CNN_PARAMS, scheme)
+    with boundary_op_counter() as ops:
+        logits = small_cnn_forward(params, x, plan=plan)
+    err = float(jnp.max(jnp.abs(logits - logits_local)))
+    same = bool((jnp.argmax(logits, -1) == jnp.argmax(logits_local, -1)).all())
+    print(f"{scheme:12s}: {plan.n_segments} segments, "
+          f"{ops['encode'] + ops['decode']} boundary ops, "
+          f"max abs err {err:.2e}, classes identical: {same}")
+
+# --- 2. VGG16 plan structure: per-layer vs segment ----------------------
 sysp = SystemParams(mu_m=2.5e9, theta_m=4e-10, mu_cmp=4e9, theta_cmp=1.35e-9,
                     mu_rec=1.5e7, theta_rec=3e-7, mu_sen=1.5e7, theta_sen=3e-7)
-specs = [li.spec for li in vgg16_conv_specs() if li.type1]
-from repro.core import k_circ
-# plan k per layer, keeping r >= 2 redundancy for the failure scenarios
+vgg = vgg16_conv_specs(224, sysp)
+for scheme in ("replication", "mds"):
+    seg = compile_plan(vgg, 10, sysp, scheme)
+    per = compile_plan(vgg, 10, sysp, scheme, max_depth=1)
+    print(f"\nVGG16 {scheme}: per-layer {per.boundary_coding_ops} boundary "
+          f"ops / {per.master_worker_bytes / 1e6:.1f} MB  ->  segment "
+          f"{seg.boundary_coding_ops} ops / "
+          f"{seg.master_worker_bytes / 1e6:.1f} MB "
+          f"({1 - seg.est_latency_s / per.est_latency_s:+.1%} modeled latency)")
+    print("  " + seg.describe())
+
+# --- 3. latency simulation on VGG16 under failures ----------------------
+specs = [li.spec for li in vgg if li.type1]
 ks = [min(k_circ(s, 10, sysp), 8) for s in specs]
+print()
 for nf in (0, 1, 2):
     sc = SimScenario(n_fail=nf)
     coded = simulate_network(specs, 10, sysp, "coded", ks=ks, scenario=sc,

@@ -21,9 +21,31 @@ from .schemes import (
     register_scheme,
     scheme_names,
 )
-from .splitting import ConvSpec, SplitPlan, plan_width_split, plan_token_split
-from .coded_conv import conv2d, coded_conv2d, coded_conv2d_sharded
+from .splitting import (
+    ConvSpec,
+    SplitPlan,
+    SegmentSplitPlan,
+    plan_width_split,
+    plan_token_split,
+    plan_segment_split,
+    chain_steps,
+)
+from .coded_conv import (
+    conv2d,
+    coded_conv2d,
+    coded_conv2d_sharded,
+    run_segment,
+    boundary_op_counter,
+)
 from .coded_linear import coded_matmul, coded_matmul_sharded
+from .netplan import (
+    LayerInfo,
+    NetPlan,
+    SegmentStep,
+    LocalStep,
+    compile_plan,
+    segment_latency,
+)
 from .latency import ShiftExp, SystemParams, phase_sizes, harmonic
 from .planner import (
     L,
@@ -55,9 +77,13 @@ __all__ = [
     "MDSCode", "ReplicationCode", "LTCode",
     "CodingScheme", "MDSScheme", "ReplicationScheme", "LTScheme",
     "UncodedScheme", "get_scheme", "register_scheme", "scheme_names",
-    "ConvSpec", "SplitPlan", "plan_width_split", "plan_token_split",
-    "conv2d", "coded_conv2d", "coded_conv2d_sharded",
+    "ConvSpec", "SplitPlan", "SegmentSplitPlan", "plan_width_split",
+    "plan_token_split", "plan_segment_split", "chain_steps",
+    "conv2d", "coded_conv2d", "coded_conv2d_sharded", "run_segment",
+    "boundary_op_counter",
     "coded_matmul", "coded_matmul_sharded",
+    "LayerInfo", "NetPlan", "SegmentStep", "LocalStep", "compile_plan",
+    "segment_latency",
     "ShiftExp", "SystemParams", "phase_sizes", "harmonic",
     "L", "L_continuous", "k_circ", "k_circ_remainder_aware", "k_star",
     "expected_latency_mc",

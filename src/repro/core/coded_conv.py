@@ -30,22 +30,71 @@ Three execution modes:
 """
 from __future__ import annotations
 
-from typing import Sequence
+import contextlib
+import threading
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..kernels.ops import shard_map_compat
-from .schemes import CodingScheme, resolve_subset
-from .splitting import ConvSpec, SplitPlan, plan_width_split
+from .schemes import (CodingScheme, commutes_elementwise, resolve_subset,
+                      source_of_piece)
+from .splitting import (ChainPlan, ConvSpec, SegmentSplitPlan, SplitPlan,
+                        plan_segment_split, plan_width_split)
 
 __all__ = [
     "conv2d",
     "split_input",
     "coded_conv2d",
     "coded_conv2d_sharded",
+    "run_segment",
+    "boundary_op_counter",
+    "ACTIVATIONS",
 ]
+
+
+# ---------------------------------------------------------------------------
+# boundary-op accounting: how many master encode/decode operations ran
+# ---------------------------------------------------------------------------
+# The netplan claim ("2·segments coding ops instead of 2·L") is enforced by
+# tests counting the operations the execution layer ACTUALLY performs, not
+# what the plan promises.  Selection schemes' encode/decode are flop-free
+# gathers but are still boundary operations (a master round-trip each), so
+# they count too.
+
+_OPS_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def boundary_op_counter():
+    """Count master-side encode/decode boundary operations in this thread.
+
+    Yields a dict ``{"encode": int, "decode": int}`` updated in place by
+    every coded pipeline run (per-layer or segment) entered under the
+    context.
+    """
+    counts = {"encode": 0, "decode": 0}
+    prev = getattr(_OPS_TLS, "counts", None)
+    _OPS_TLS.counts = counts
+    try:
+        yield counts
+    finally:
+        _OPS_TLS.counts = prev
+
+
+def _count_op(kind: str) -> None:
+    counts = getattr(_OPS_TLS, "counts", None)
+    if counts is not None:
+        counts[kind] += 1
+
+
+ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
 
 
 def conv2d(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
@@ -98,6 +147,7 @@ def coded_conv2d(
         plan = plan_width_split(spec, code.k)
     parts = split_input(x, plan)  # (k, B, C, H, W_I^p)
     coded_in = _encode_partitions(code, parts)  # (n, ...)
+    _count_op("encode")
 
     if executor is not None:
         # Execution phase on the pool: piece i is a real conv subtask.
@@ -117,12 +167,134 @@ def coded_conv2d(
         flat = sel.reshape(len(subset), -1)
         decoded = code.decode_from(subset, flat)
         y_parts = decoded.reshape((code.k,) + coded_out.shape[1:])
+    _count_op("decode")
 
     # Reassemble on the width dim; master-kept remainder (footnote 2).
     y = jnp.concatenate(list(y_parts), axis=-1)
     if plan.remainder is not None:
         r = plan.remainder
         y_rem = conv2d(x[..., r.a_i : r.b_i], w, spec.stride)
+        y = jnp.concatenate([y, y_rem], axis=-1)
+    return y
+
+
+def _chain(xp: jax.Array, cp: ChainPlan, weights: Sequence[jax.Array],
+           specs: Sequence[ConvSpec], pads: Sequence[int],
+           acts: Sequence[str | None], apply_acts: bool) -> jax.Array:
+    """Run one partition's self-contained conv chain on its (coded or true)
+    entry slice.  Interior boundaries re-apply the activation (when
+    ``apply_acts``) and inject the re-pad: full zero rows on H, and on W
+    only the per-partition edge shortfall (``ChainStep.lz``/``rz``) — the
+    interior halo columns are real data already resident in the slice."""
+    for j, (w, sp) in enumerate(zip(weights, specs)):
+        if j > 0:
+            st = cp.steps[j]
+            if apply_acts and acts[j - 1] is not None:
+                xp = ACTIVATIONS[acts[j - 1]](xp)
+            p = int(pads[j])
+            if p or st.lz or st.rz:
+                xp = jnp.pad(xp, ((0, 0), (0, 0), (p, p), (st.lz, st.rz)))
+        xp = conv2d(xp, w, sp.stride)
+    return xp
+
+
+def run_segment(
+    x: jax.Array,
+    weights: Sequence[jax.Array],
+    scheme: CodingScheme,
+    specs: Sequence[ConvSpec],
+    pads: Sequence[int],
+    acts: Sequence[str | None],
+    split: SegmentSplitPlan | None = None,
+    subset: Sequence[int] | None = None,
+    executor=None,
+    assignment: Sequence[int] | None = None,
+) -> jax.Array:
+    """Execute a coded *segment*: encode once, per-piece conv chains, decode
+    once (core/netplan.py's execution form).
+
+    ``x`` is the segment's pre-padded entry input (the caller applies layer
+    0's pad, exactly as ``coded_conv2d`` expects).  ``acts[j]`` names the
+    elementwise activation after layer j; interior activations run inside
+    the worker chains — which is only exact for selection-structured
+    schemes (``schemes.commutes_elementwise``), so a linear-mix scheme
+    with an interior activation or re-pad is rejected loudly rather than
+    silently producing wrong output.  The final activation is NOT applied
+    here: the master applies it after decode (with any pooling), keeping
+    depth-1 segments numerically identical to ``coded_conv2d``.
+
+    Functional form computes all n chains; with ``executor`` (a
+    ``repro.dist.CodedExecutor``) each chain is one multi-layer piece on
+    the worker pool, decoded at the k-th *arrival* with straggler
+    cancellation at segment granularity.
+    """
+    d = len(specs)
+    if not (len(weights) == len(pads) == len(acts) == d):
+        raise ValueError(f"inconsistent segment arity: {len(weights)} weights"
+                         f", {d} specs, {len(pads)} pads, {len(acts)} acts")
+    if split is None:
+        split = plan_segment_split(specs, pads, scheme.k)
+    if split.k != scheme.k:
+        raise ValueError(f"split.k={split.k} != scheme.k={scheme.k}")
+    commuting = commutes_elementwise(scheme)
+    if not commuting and d > 1:
+        if any(a is not None for a in acts[:-1]):
+            raise ValueError(
+                f"scheme {getattr(scheme, 'scheme_name', scheme)} is a "
+                "linear mix: relu(G x) != G relu(x), so pieces cannot stay "
+                "resident across an interior activation — recompile with a "
+                "decode point there (netplan places it automatically)")
+        if any(int(p) != 0 for p in pads[1:]) or not split.uniform:
+            raise ValueError(
+                "interior re-padding injects partition-dependent edge zeros"
+                " that a linear mix cannot represent piece-locally — only "
+                "selection schemes (replication/uncoded) may fuse across it")
+
+    if commuting:
+        # selection dispatch: piece i carries its source partition's slice
+        # verbatim (edge chains are narrower — no row-stacking involved)
+        srcs = [source_of_piece(scheme, i) for i in range(scheme.n)]
+        piece_part = [split.parts[s] for s in srcs]
+        piece_in = [x[..., cp.entry.a_i:cp.entry.b_i] for cp in piece_part]
+    else:
+        parts = jnp.stack(
+            [x[..., cp.entry.a_i:cp.entry.b_i] for cp in split.parts])
+        coded_in = _encode_partitions(scheme, parts)
+        piece_part = [split.parts[0]] * scheme.n
+        piece_in = [coded_in[i] for i in range(scheme.n)]
+    _count_op("encode")
+
+    def _piece(i: int) -> jax.Array:
+        return _chain(piece_in[i], piece_part[i], weights, specs, pads, acts,
+                      apply_acts=commuting)
+
+    if executor is not None:
+        if hasattr(executor, "ensure_armed"):
+            # per-layer telemetry: a depth-d chain piece reports d stage
+            # durations; declaring the per-layer sizes lets an adaptive
+            # executor feed each stage to the estimator (DESIGN.md §8/§9)
+            from .netplan import segment_layer_sizes
+
+            executor.ensure_armed(segment_layer_sizes(specs, pads, scheme,
+                                                      split))
+        y_parts = executor.run(
+            scheme, [lambda i=i: _piece(i) for i in range(scheme.n)],
+            assignment=assignment,
+        )  # (k, B, C_O, H_O, W_O^p)
+    else:
+        subset = resolve_subset(scheme, subset)
+        outs = jnp.stack([_piece(i) for i in subset])
+        decoded = scheme.decode_from(subset, outs.reshape(len(subset), -1))
+        y_parts = decoded.reshape((scheme.k,) + outs.shape[1:])
+    _count_op("decode")
+
+    y = jnp.concatenate(list(y_parts), axis=-1)
+    if split.remainder is not None:
+        # footnote 2 at segment granularity: the master runs the remainder
+        # columns' whole chain locally, on true values (acts always apply)
+        y_rem = _chain(
+            x[..., split.remainder.entry.a_i:split.remainder.entry.b_i],
+            split.remainder, weights, specs, pads, acts, apply_acts=True)
         y = jnp.concatenate([y, y_rem], axis=-1)
     return y
 

@@ -14,16 +14,18 @@ work, mirroring the paper's type-1/type-2 split.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .schemes import CodingScheme, resolve_subset
+from .coded_conv import _count_op
+from .schemes import (CodingScheme, commutes_elementwise, resolve_subset,
+                      source_of_piece)
 from .splitting import SplitPlan, plan_token_split
 
-__all__ = ["coded_matmul", "coded_matmul_sharded"]
+__all__ = ["coded_matmul", "coded_matmul_sharded", "coded_ffn_segment"]
 
 
 def _encode_tokens(code: CodingScheme, x: jax.Array, plan: SplitPlan) -> jax.Array:
@@ -57,6 +59,7 @@ def coded_matmul(
     T = x.shape[0]
     plan = plan_token_split(T, code.k)
     coded_in = _encode_tokens(code, x, plan)  # (n, T_p, d_in)
+    _count_op("encode")
     if executor is not None:
         decoded = executor.run(
             code,
@@ -70,8 +73,68 @@ def coded_matmul(
         sel = coded_out[jnp.asarray(subset)]
         decoded = code.decode_from(subset, sel.reshape(len(subset), -1))
         y = decoded.reshape(code.k * plan.w_out_p, w.shape[-1])
+    _count_op("decode")
     if plan.remainder is not None:
         y = jnp.concatenate([y, x[plan.remainder.a_i :] @ w], axis=0)
+    return y
+
+
+def coded_ffn_segment(
+    x: jax.Array,
+    w_in: jax.Array,
+    w_out: jax.Array,
+    act: Callable[[jax.Array], jax.Array],
+    code: CodingScheme,
+    w_gate: jax.Array | None = None,
+    subset: Sequence[int] | None = None,
+    executor=None,
+    assignment: Sequence[int] | None = None,
+) -> jax.Array:
+    """The whole (gated) FFN as ONE coded token segment (DESIGN.md §9).
+
+    Token slices are the K=S=1 degenerate width split: no halo at all, so
+    consecutive GEMMs keep their slice resident trivially — the only
+    obstacle to fusing in -> act -> (gate *) -> out into a single
+    encode/decode pair is the activation, which commutes exactly with
+    selection-structured schemes (replication/uncoded).  For those the
+    coded-GEMM boundary count of one FFN drops from 6 (3 per-GEMM
+    encode/decode pairs) to 2, and the master<->worker traffic from
+    3 x (d_model + d_ff)-sized transfers to one d_model each way.  Linear
+    mixes (MDS/LT) are rejected: relu(G x) != G relu(x).
+
+    x: (T, d_model).  The T mod k remainder tokens run on the master
+    through the same fused chain (footnote 2).
+    """
+    if not commutes_elementwise(code):
+        raise ValueError(
+            f"scheme {getattr(code, 'scheme_name', code)} is a linear mix: "
+            "the FFN activation cannot run inside a coded token slice — "
+            "use per-GEMM coded_matmul (decode before each activation)")
+    T = x.shape[0]
+    plan = plan_token_split(T, code.k)
+
+    def chain(xt: jax.Array) -> jax.Array:
+        h = xt @ w_in
+        h = act(xt @ w_gate) * h if w_gate is not None else act(h)
+        return h @ w_out
+
+    t_p = plan.w_out_p
+    srcs = [source_of_piece(code, i) for i in range(code.n)]
+    piece_in = [x[s * t_p:(s + 1) * t_p] for s in srcs]
+    _count_op("encode")  # the selection dispatch is the boundary op
+    if executor is not None:
+        decoded = executor.run(
+            code, [lambda i=i: chain(piece_in[i]) for i in range(code.n)],
+            assignment=assignment)
+        y = decoded.reshape(code.k * t_p, w_out.shape[-1])
+    else:
+        subset = resolve_subset(code, subset)
+        outs = jnp.stack([chain(piece_in[i]) for i in subset])
+        decoded = code.decode_from(subset, outs.reshape(len(subset), -1))
+        y = decoded.reshape(code.k * t_p, w_out.shape[-1])
+    _count_op("decode")
+    if plan.remainder is not None:
+        y = jnp.concatenate([y, chain(x[plan.remainder.a_i:])], axis=0)
     return y
 
 

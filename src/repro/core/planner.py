@@ -36,6 +36,7 @@ __all__ = [
     "L_continuous",
     "plan_k",
     "k_circ",
+    "k_circ_segment",
     "k_star",
     "expected_latency_mc",
     "uncoded_latency",
@@ -351,6 +352,30 @@ def plan_layer(
     ks = k_star(spec, n, params, samples) if with_mc else None
     mc = expected_latency_mc(spec, n, kc, params, samples) if with_mc else None
     return PlanResult(k_circ=kc, k_star=ks, L_at_circ=L(spec, n, kc, params), mc_at_circ=mc)
+
+
+def k_circ_segment(specs, pads, n: int, params: SystemParams,
+                   scheme: str = "mds") -> int:
+    """Segment-level k° (DESIGN.md §9): minimize the segment extension of
+    L(k) — encode/decode amortized over a chain of layers, composed-halo
+    entry transfer, per-layer chain compute, scheme-appropriate order
+    factor, maxed against the master's remainder chain — over integer k.
+
+    Delegates to the ONE implementation of that search (the netplan
+    compiler's per-candidate scoring), so the public planning entry and
+    the cut DP can never drift apart.  For a depth-1 chain this reduces
+    exactly to ``k_circ_remainder_aware`` (pinned in tests/test_netplan.py).
+    """
+    from .netplan import LayerInfo, _plan_segment
+
+    layers = [LayerInfo(f"seg{j}", spec, True, act=None, pad=int(p))
+              for j, (spec, p) in enumerate(zip(specs, pads))]
+    planned = _plan_segment(scheme, layers, n, params)
+    if planned is None:
+        raise ValueError(
+            f"no feasible split for the given chain (W_O="
+            f"{specs[-1].w_out}, n={n}) — every k hits the pad region")
+    return planned[0].k
 
 
 def k_circ_remainder_aware(spec: ConvSpec, n: int, params: SystemParams,

@@ -50,6 +50,8 @@ from .splitting import ConvSpec
 __all__ = [
     "CodingScheme",
     "resolve_subset",
+    "commutes_elementwise",
+    "source_of_piece",
     "SimScenario",
     "SimPlan",
     "SimBatch",
@@ -89,6 +91,40 @@ class CodingScheme(Protocol):
     def encode_flops(self, row_elems: int) -> int: ...
 
     def decode_flops(self, row_elems: int) -> int: ...
+
+
+# Whether encoding commutes with elementwise nonlinearities:
+# act(encode(x)) == encode(act(x)) holds iff every generator row has at
+# most one nonzero (selection structure) — replication and uncoded, but
+# NOT MDS/LT mixes (relu(G x) != G relu(x)).  The segment compiler
+# (core/netplan.py) reads this to decide whether coded pieces may stay
+# resident across an interior activation / re-pad boundary, or whether
+# the boundary forces a decode point.  Class-level so the compiler can
+# consult it before instantiating a scheme.
+COMMUTES_ELEMENTWISE: dict[str, bool] = {}
+
+
+def commutes_elementwise(scheme_or_name) -> bool:
+    """True iff the scheme's encode commutes with elementwise functions."""
+    name = (scheme_or_name if isinstance(scheme_or_name, str)
+            else getattr(scheme_or_name, "scheme_name", None))
+    if name is None:
+        return False
+    return COMMUTES_ELEMENTWISE.get(_ALIASES.get(name, name), False)
+
+
+def source_of_piece(scheme: CodingScheme, piece: int) -> int | None:
+    """Which source partition coded piece ``piece`` carries verbatim, or
+    None for a true linear mix (MDS/LT).  Selection schemes route segment
+    entry slices through this instead of a matrix encode, because the edge
+    partitions' composed chains are narrower than the interior ones
+    (splitting.ChainStep.lz/rz) and cannot be stacked row-wise."""
+    if not commutes_elementwise(scheme):
+        return None
+    assign = getattr(scheme, "assignment", None)
+    if callable(assign):  # replication: coded row i holds source i % k
+        return int(assign()[piece])
+    return int(piece)  # uncoded: identity
 
 
 # ---------------------------------------------------------------------------
@@ -176,14 +212,19 @@ _SCHEMES: dict[str, type] = {}
 _ALIASES: dict[str, str] = {"coded": "mds"}
 
 
-def register_scheme(name: str, *aliases: str):
-    """Class decorator: register a scheme under ``name`` (+ aliases)."""
+def register_scheme(name: str, *aliases: str, commuting: bool = False):
+    """Class decorator: register a scheme under ``name`` (+ aliases).
+
+    ``commuting`` declares that the scheme's encode commutes with
+    elementwise nonlinearities (see :data:`COMMUTES_ELEMENTWISE`).
+    """
 
     def deco(cls):
         _SCHEMES[name] = cls
         for a in aliases:
             _ALIASES[a] = name
         cls.scheme_name = name
+        COMMUTES_ELEMENTWISE[name] = commuting
         return cls
 
     return deco
@@ -324,7 +365,7 @@ class MDSScheme(MDSCode):
 # replication [15]
 # ---------------------------------------------------------------------------
 
-@register_scheme("replication")
+@register_scheme("replication", commuting=True)
 class ReplicationScheme(ReplicationCode):
     """2x replication: k = floor(n/2) subtasks, each on two workers."""
 
@@ -378,7 +419,7 @@ class ReplicationScheme(ReplicationCode):
 # uncoded [8]
 # ---------------------------------------------------------------------------
 
-@register_scheme("uncoded")
+@register_scheme("uncoded", commuting=True)
 @dataclasses.dataclass(frozen=True)
 class UncodedScheme:
     """No redundancy: n = k disjoint subtasks, wait for all of them.

@@ -14,8 +14,10 @@ from .faults import (
     DelayModel,
     DeterministicDelay,
     FaultPlan,
+    SegmentDelay,
     ShiftExpDelay,
     StragglerDrift,
+    per_layer_sizes,
 )
 from .pool import Arrival, Piece, PieceTiming, RunReport, WorkerPool
 
@@ -34,6 +36,8 @@ __all__ = [
     "FaultPlan",
     "StragglerDrift",
     "ShiftExpDelay",
+    "SegmentDelay",
+    "per_layer_sizes",
     "Arrival",
     "Piece",
     "PieceTiming",

@@ -92,17 +92,37 @@ class AdaptivePlanner:
         self._lock = threading.Lock()
 
     # -- telemetry ---------------------------------------------------------
-    def observe_report(self, report: RunReport, sizes: PhaseSizes) -> None:
+    def observe_report(self, report: RunReport,
+                       sizes: PhaseSizes | Sequence[PhaseSizes]) -> None:
         """Ingest one run's per-piece timings, normalized by the prior mean
         round-trip at the run's phase sizes (so profiles learned at one
-        split price plans at another)."""
-        shift, excess = round_trip_shift_excess(sizes, self.prior)
+        split price plans at another).
+
+        ``sizes`` may be a *sequence* of per-layer PhaseSizes for
+        multi-layer segment pieces (netplan, DESIGN.md §9): when a
+        timing carries per-layer ``stages`` matching it, each stage feeds
+        the profile as its own normalized sample — a depth-d segment
+        yields d estimator observations per piece instead of one."""
+        per_layer = None
+        if not isinstance(sizes, PhaseSizes):
+            per_layer = [round_trip_shift_excess(s, self.prior)
+                         for s in sizes]
+            shift = sum(s for s, _ in per_layer)
+            excess = sum(e for _, e in per_layer)
+        else:
+            shift, excess = round_trip_shift_excess(sizes, self.prior)
         unit = shift + excess
         if unit <= 0.0:
             raise ValueError(f"degenerate prior round-trip for {sizes}")
         with self._lock:
             for t in report.timings:
-                self.bank.observe(t.worker, t.t_compute, units=unit)
+                if (per_layer is not None and t.stages
+                        and len(t.stages) == len(per_layer)):
+                    for dur, (s, e) in zip(t.stages, per_layer):
+                        if s + e > 0.0:
+                            self.bank.observe(t.worker, dur, units=s + e)
+                else:
+                    self.bank.observe(t.worker, t.t_compute, units=unit)
             rho = shift / unit
             self._shift_frac = (rho if self._shift_frac is None else
                                 (1 - self._alpha) * self._shift_frac
@@ -172,11 +192,21 @@ class AdaptiveExecutor(CodedExecutor):
         self._runs = 0
         self._pending_sizes: PhaseSizes | None = None
 
-    def arm_observation(self, sizes: PhaseSizes) -> None:
+    def arm_observation(self, sizes: PhaseSizes | Sequence[PhaseSizes]
+                        ) -> None:
         """Declare the next run's work content so its report feeds the
         planner — callers that bypass :meth:`plan_matmul` (the conv path,
-        benchmarks) arm this before invoking ``coded_conv2d``."""
+        benchmarks) arm this before invoking ``coded_conv2d`` /
+        ``run_segment``.  A sequence of per-layer sizes declares a
+        multi-layer segment piece (per-stage telemetry)."""
         self._pending_sizes = sizes
+
+    def ensure_armed(self, sizes) -> None:
+        """As :meth:`arm_observation`, but defers to anything the caller
+        armed explicitly — the seam ``run_segment`` uses to auto-feed the
+        planner with its per-layer sizes."""
+        if self._pending_sizes is None:
+            self._pending_sizes = sizes
 
     def plan_matmul(self, scheme: CodingScheme, scheme_name: str,
                     n_tokens: int, d_in: int, d_out: int
@@ -198,7 +228,8 @@ class AdaptiveExecutor(CodedExecutor):
             piece_fns: Sequence[Callable[[], Any]], *,
             assignment: Sequence[int] | None = None,
             speeds: Sequence[float] | None = None,
-            sizes: PhaseSizes | None = None, **kw) -> jnp.ndarray:
+            sizes: PhaseSizes | Sequence[PhaseSizes] | None = None,
+            **kw) -> jnp.ndarray:
         """As ``CodedExecutor.run``; additionally plans the assignment from
         live profiles when the caller gave none, and feeds the run's
         timings back into the planner (``sizes`` — or the pending sizes a

@@ -81,6 +81,14 @@ class CodedExecutor:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    def ensure_armed(self, sizes) -> None:
+        """Telemetry hook: declare the next run's work content (one
+        ``PhaseSizes`` — or a per-layer sequence for segment chains)
+        UNLESS the caller already armed something more specific.  A no-op
+        here; ``AdaptiveExecutor`` overrides it to feed its planner —
+        execution layers call it unconditionally so segment runs train
+        the estimator without caring which executor they were handed."""
+
     def run(
         self,
         scheme: CodingScheme,

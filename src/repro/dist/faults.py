@@ -38,6 +38,8 @@ __all__ = [
     "DelayModel",
     "DeterministicDelay",
     "ShiftExpDelay",
+    "SegmentDelay",
+    "per_layer_sizes",
 ]
 
 
@@ -109,6 +111,56 @@ class DeterministicDelay:
         if isinstance(self.per_worker, (int, float)):
             return float(self.per_worker)
         return float(self.per_worker[worker])
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentDelay:
+    """Multi-layer chain round-trip (netplan segments, DESIGN.md §9).
+
+    A segment piece is a whole chain of convs: one entry receive, one
+    compute stage per layer, one exit send.  ``layer_sizes`` carries one
+    :class:`PhaseSizes` per chain layer with the transmission sizes
+    already placed where they occur (``n_rec`` nonzero on the first layer
+    only, ``n_sen`` on the last — netplan.segment_sizes split per layer,
+    or hand-built).  ``stage_times`` exposes the per-layer durations so
+    the pool can record them into ``PieceTiming.stages`` — the per-layer
+    telemetry PR 3's estimator consumes.  Deterministic in
+    (seed, worker, piece), like every DelayModel.
+    """
+
+    params: SystemParams
+    layer_sizes: tuple  # tuple[PhaseSizes, ...]
+    seed: int = 0
+
+    def stage_times(self, worker: int, piece: int) -> tuple:
+        rng = np.random.default_rng((self.seed, worker, piece))
+        out = []
+        for s in self.layer_sizes:
+            t = 0.0
+            if s.n_rec:
+                t += self.params.rec.scaled(s.n_rec).sample(rng)
+            t += self.params.cmp.scaled(s.n_cmp).sample(rng)
+            if s.n_sen:
+                t += self.params.sen.scaled(s.n_sen).sample(rng)
+            out.append(float(t))
+        return tuple(out)
+
+    def piece_time(self, worker: int, piece: int) -> float:
+        return float(sum(self.stage_times(worker, piece)))
+
+
+def per_layer_sizes(seg_sizes: Sequence[PhaseSizes]) -> tuple:
+    """Normalize a list of per-layer sizes for SegmentDelay: transmission
+    charged once per chain — entry receive on the first layer, exit send
+    on the last (interior stages are pure compute)."""
+    out = []
+    last = len(seg_sizes) - 1
+    for j, s in enumerate(seg_sizes):
+        out.append(dataclasses.replace(
+            s, n_rec=s.n_rec if j == 0 else 0.0,
+            n_sen=s.n_sen if j == last else 0.0,
+            n_enc=0.0, n_dec=0.0))
+    return tuple(out)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -79,6 +79,11 @@ class PieceTiming:
     t_dispatch: float
     t_compute: float
     t_arrival: float
+    # per-layer stage durations of a multi-layer (segment) piece, when the
+    # delay model exposes them (faults.SegmentDelay) — summing to
+    # t_compute up to the slowdown-scaled clamp.  Empty for single-layer
+    # pieces and measured mode.
+    stages: tuple = ()
 
 
 @dataclasses.dataclass
@@ -119,6 +124,7 @@ class _Event:
     t: float
     payload: Any = None
     t_start: float = 0.0  # virtual time the worker began serving the piece
+    stages: tuple = ()    # per-layer durations (segment pieces)
 
 
 @dataclasses.dataclass
@@ -230,6 +236,7 @@ class WorkerPool:
                 failed = True
                 continue
             dur = self._duration(ctx, w, piece, measured=elapsed)
+            stages = self._stage_durations(ctx, w, piece)
             t_start = max(t_free, piece.not_before)
             t_fin = t_start + dur
             t_free, done = t_fin, done + 1
@@ -237,7 +244,7 @@ class WorkerPool:
                 if not self._sleep_until(ctx, t_fin):
                     continue  # cancelled mid-sleep: drop the late result
             ctx.post(_Event("arrival", ctx.epoch, w, piece.idx, t_fin,
-                            payload=result, t_start=t_start))
+                            payload=result, t_start=t_start, stages=stages))
 
     def _duration(self, ctx: _RunCtx, w: int, piece: Piece, *,
                   measured: float | None = None) -> float:
@@ -246,6 +253,14 @@ class WorkerPool:
         else:
             base = measured if measured is not None else 0.0
         return max(base * ctx.faults.slowdown(w), _MIN_DUR)
+
+    def _stage_durations(self, ctx: _RunCtx, w: int, piece: Piece) -> tuple:
+        """Per-layer durations of a multi-layer piece, when the delay model
+        exposes them; straggling scales every stage uniformly."""
+        if ctx.delay is None or not hasattr(ctx.delay, "stage_times"):
+            return ()
+        sl = ctx.faults.slowdown(w)
+        return tuple(s * sl for s in ctx.delay.stage_times(w, piece.idx))
 
     def _sleep_until(self, ctx: _RunCtx, t_virtual: float) -> bool:
         """Real mode: land this event at wall time t0 + t_virtual*scale."""
@@ -397,7 +412,8 @@ class WorkerPool:
                 st.order.append(ev.piece)
                 report.arrivals.append(Arrival(ev.worker, ev.piece, ev.t))
                 report.timings.append(PieceTiming(
-                    ev.worker, ev.piece, ev.t_start, ev.t - ev.t_start, ev.t))
+                    ev.worker, ev.piece, ev.t_start, ev.t - ev.t_start, ev.t,
+                    stages=ev.stages))
                 subset = until(list(st.order))
                 if subset is not None:
                     report.subset = list(subset)

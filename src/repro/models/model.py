@@ -114,6 +114,12 @@ class ModelConfig:
     coded_n: int = 0
     coded_k: int = 0
     coded_scheme: str = "mds"
+    # network-level segment execution (DESIGN.md §9): fuse each dense FFN
+    # (in -> act -> gate* -> out) into ONE coded token segment — a single
+    # encode/decode pair instead of one per GEMM.  Only exact for schemes
+    # whose encode commutes with the activation (replication/uncoded);
+    # linear mixes fall back to per-GEMM coding automatically.
+    coded_segment: bool = False
     # rematerialise each layer's activations in the backward pass
     remat: bool = False
     # metrics/debug: force python-loop layer execution and unrolled
@@ -304,7 +310,38 @@ def _matmul(cfg: ModelConfig, x: jax.Array, w: jax.Array) -> jax.Array:
     return x @ w
 
 
+def _ffn_segment(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array | None:
+    """Whole-FFN coded segment (one encode/decode pair), or None when the
+    configuration cannot fuse: scheme is a linear mix, too few tokens, or
+    the trace is abstract while an executor is active."""
+    from ..core.coded_linear import coded_ffn_segment
+    from ..core.schemes import commutes_elementwise
+
+    if not (cfg.coded_n and cfg.coded_segment
+            and commutes_elementwise(cfg.coded_scheme)):
+        return None
+    code = _coded_scheme(cfg.coded_scheme, cfg.coded_n, cfg.coded_k or None)
+    shape = x.shape
+    tokens = 1
+    for d in shape[:-1]:
+        tokens *= d
+    if tokens < code.k:
+        return None  # master-local, same as _matmul's footnote-2 path
+    flat = x.reshape(-1, shape[-1]).astype(jnp.float32)
+    ex = current_executor()
+    if ex is not None and isinstance(x, jax.core.Tracer):
+        return None
+    f32 = lambda w: w.astype(jnp.float32)
+    y = coded_ffn_segment(
+        flat, f32(p["w_in"]), f32(p["w_out"]), lambda h: _act(cfg, h), code,
+        w_gate=f32(p["w_gate"]) if cfg.gated else None, executor=ex)
+    return y.reshape(*shape[:-1], p["w_out"].shape[-1]).astype(x.dtype)
+
+
 def _ffn(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    y = _ffn_segment(cfg, p, x)
+    if y is not None:
+        return y
     h = _matmul(cfg, x, p["w_in"])
     if cfg.gated:
         h = _act(cfg, _matmul(cfg, x, p["w_gate"])) * h

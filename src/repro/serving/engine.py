@@ -59,7 +59,8 @@ class Completion:
 class Engine:
     def __init__(self, cfg: ModelConfig, params=None, *, coded: tuple | None = None,
                  scheme: str | None = None, max_batch: int = 8, seed: int = 0,
-                 executor=None, adaptive: bool = False, adaptive_prior=None):
+                 executor=None, adaptive: bool = False, adaptive_prior=None,
+                 segment: bool | None = None):
         # scheme=None means "whatever cfg.coded_scheme says" — a default of
         # "mds" would silently clobber a config that chose another scheme
         if scheme is not None:
@@ -73,6 +74,19 @@ class Engine:
             # cfg may already enable coding (coded_n > 0): honour the
             # requested scheme rather than silently keeping cfg's
             cfg = dataclasses.replace(cfg, coded_scheme=scheme)
+        if segment is not None:
+            # network-level serving (DESIGN.md §9): each FFN fuses into one
+            # coded token segment — 2 boundary ops instead of 6 — for
+            # schemes whose encode commutes with the activation
+            from ..core.schemes import commutes_elementwise
+
+            if segment and not commutes_elementwise(cfg.coded_scheme):
+                raise ValueError(
+                    f"segment=True needs a selection scheme (replication/"
+                    f"uncoded): {cfg.coded_scheme!r} is a linear mix and "
+                    "cannot keep token slices resident across the FFN "
+                    "activation — it would silently fall back per-GEMM")
+            cfg = dataclasses.replace(cfg, coded_segment=segment)
         if adaptive:
             if executor is None:
                 raise ValueError(

@@ -1,0 +1,347 @@
+"""Segment execution == plain execution (DESIGN.md §9): the equivalence
+sweep across every registered scheme x (n, k) x geometry, the composed
+range property (eqs. 1-2 folded), and executor-driven segment runs with
+per-layer telemetry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coded_conv import (ACTIVATIONS, boundary_op_counter, conv2d,
+                                   run_segment)
+from repro.core.latency import SystemParams
+from repro.core.netplan import compile_plan, segment_layer_sizes
+from repro.core.schemes import commutes_elementwise, get_scheme, scheme_names
+from repro.core.splitting import (ConvSpec, chain_steps, plan_segment_split,
+                                  plan_width_split)
+from repro.dist import (CodedExecutor, FakeClock, FaultPlan, SegmentDelay,
+                        per_layer_sizes)
+from repro.models.cnn import (SMALL_CNN_PARAMS, init_cnn, init_small_cnn,
+                              forward_plan, small_cnn_forward,
+                              small_cnn_layers, vgg16_conv_specs)
+
+WIFI = SystemParams(mu_m=2.5e9, theta_m=4e-10, mu_cmp=4e9, theta_cmp=1.35e-9,
+                    mu_rec=1.5e7, theta_rec=3e-7, mu_sen=1.5e7, theta_sen=3e-7)
+
+
+def _ref_chain(x, ws, specs, pads, acts, final_act=False):
+    for j, (w, sp) in enumerate(zip(ws, specs)):
+        if j > 0:
+            if acts[j - 1] is not None:
+                x = ACTIVATIONS[acts[j - 1]](x)
+            p = pads[j]
+            if p:
+                x = jnp.pad(x, ((0, 0), (0, 0), (p, p), (p, p)))
+        x = conv2d(x, w, sp.stride)
+    if final_act and acts[-1] is not None:
+        x = ACTIVATIONS[acts[-1]](x)
+    return x
+
+
+def _rand_segment(key, specs):
+    kx, *kw = jax.random.split(key, len(specs) + 1)
+    x = jax.random.normal(kx, (2, specs[0].c_in, specs[0].h_in,
+                               specs[0].w_in), jnp.float32)
+    ws = [jax.random.normal(k, (s.c_out, s.c_in, s.kernel, s.kernel),
+                            jnp.float32) * (s.c_in * s.kernel ** 2) ** -0.5
+          for k, s in zip(kw, specs)]
+    return x, ws
+
+
+def _tol(scheme_name):
+    # selection schemes route true slices: exact; linear mixes pay the f32
+    # decode solve roundoff (DESIGN.md §5 conditioning)
+    return dict(atol=1e-4, rtol=1e-4) if commutes_elementwise(scheme_name) \
+        else dict(atol=1e-3, rtol=1e-3)
+
+
+# geometry cases: (sizes chained as padded specs, pads, acts)
+def _relu_chain(depth, size, c=8, stride_mid=False):
+    specs, pads, acts, s = [], [], [], size
+    for j in range(depth):
+        stride = 2 if (stride_mid and j == depth // 2) else 1
+        specs.append(ConvSpec(c_in=3 if j == 0 else c, c_out=c,
+                              h_in=s + 2, w_in=s + 2, kernel=3,
+                              stride=stride))
+        pads.append(1)
+        acts.append("relu")
+        s = specs[-1].w_out
+    return specs, pads, acts
+
+
+def _linear_chain(depth, size, c=8):
+    specs, pads, acts, s = [], [], [], size
+    for j in range(depth):
+        specs.append(ConvSpec(c_in=3 if j == 0 else c, c_out=c,
+                              h_in=s, w_in=s, kernel=3, stride=1))
+        pads.append(0)
+        acts.append(None)
+        s = specs[-1].w_out
+    return specs, pads, acts
+
+
+class TestEquivalenceSweep:
+    """run_segment == the plain chain for every registered scheme, across
+    (n, k) combos, stride-2 geometry, and remainder splits."""
+
+    @pytest.mark.parametrize("scheme_name", scheme_names())
+    @pytest.mark.parametrize("n,k", [(4, 2), (6, 4), (8, 5)])
+    @pytest.mark.parametrize("geometry", ["relu", "relu_stride2", "linear"])
+    def test_segment_matches_plain(self, scheme_name, n, k, geometry):
+        if geometry == "relu":
+            specs, pads, acts = _relu_chain(3, 20)
+        elif geometry == "relu_stride2":
+            specs, pads, acts = _relu_chain(3, 22, stride_mid=True)
+        else:
+            specs, pads, acts = _linear_chain(3, 24)
+        if not commutes_elementwise(scheme_name) and geometry != "linear":
+            # linear mixes cannot fuse across relu: their segment form is
+            # depth-1; covered by test_depth1_equals_coded_conv2d and the
+            # compiled-plan sweep below
+            pytest.skip("linear mix x interior activation is uncompilable")
+        scheme = _make(scheme_name, n, k)
+        if scheme.k > specs[-1].w_out:
+            pytest.skip("k wider than the final output")
+        x, ws = _rand_segment(jax.random.PRNGKey(n * 31 + k), specs)
+        ref = _ref_chain(x, ws, specs, pads, acts)
+        out = run_segment(x, ws, scheme, specs, pads, acts)
+        assert out.shape == ref.shape
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   **_tol(scheme_name))
+
+    @pytest.mark.parametrize("scheme_name", scheme_names())
+    def test_depth1_equals_coded_conv2d(self, scheme_name):
+        """A depth-1 segment is exactly the per-layer pipeline."""
+        from repro.core.coded_conv import coded_conv2d
+
+        spec = ConvSpec(c_in=4, c_out=6, h_in=18, w_in=18, kernel=3)
+        scheme = _make(scheme_name, 6, 3)
+        x, ws = _rand_segment(jax.random.PRNGKey(0), [spec])
+        a = run_segment(x, ws, scheme, [spec], [1], ["relu"])
+        b = coded_conv2d(x, ws[0], scheme, spec)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+    @pytest.mark.parametrize("scheme_name", scheme_names())
+    def test_compiled_small_cnn_forward(self, scheme_name):
+        """Full compiled-plan forward (segments + pools + remainder) matches
+        plain inference for every scheme."""
+        params = init_small_cnn(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 32, 32),
+                              jnp.float32)
+        ref = small_cnn_forward(params, x)
+        out = small_cnn_forward(params, x, scheme=scheme_name, n=6)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   **_tol(scheme_name))
+
+    def test_subset_insensitivity(self):
+        """Any decodable subset yields the same segment output."""
+        specs, pads, acts = _relu_chain(2, 16)
+        scheme = get_scheme("replication")(8)  # k=4
+        x, ws = _rand_segment(jax.random.PRNGKey(3), specs)
+        outs = [run_segment(x, ws, scheme, specs, pads, acts, subset=s)
+                for s in ([0, 1, 2, 3], [4, 5, 6, 7], [0, 5, 2, 7])]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                       atol=1e-6)
+
+    def test_linear_mix_guard_raises(self):
+        specs, pads, acts = _relu_chain(2, 16)
+        x, ws = _rand_segment(jax.random.PRNGKey(0), specs)
+        with pytest.raises(ValueError, match="linear mix"):
+            run_segment(x, ws, get_scheme("mds").make(6, 4), specs, pads,
+                        acts)
+
+
+def _make(scheme_name, n, k):
+    cls = get_scheme(scheme_name)
+    if cls.scheme_name == "replication":
+        return cls(n if k == max(n // 2, 1) else 2 * k)
+    if cls.scheme_name == "uncoded":
+        return cls(k)
+    return cls.make(n, k)
+
+
+class TestComposedRanges:
+    """Hypothesis property: the one-shot composed ranges equal the fold of
+    the per-layer eqs. 1-2 (with pad-region clipping), layer by layer."""
+
+    @given(data=st.data())
+    @settings(max_examples=60, deadline=None)
+    def test_compose_equals_fold(self, data):
+        depth = data.draw(st.integers(1, 4))
+        specs, pads = [], []
+        size = data.draw(st.integers(12, 40))
+        c = 4
+        for j in range(depth):
+            kernel = data.draw(st.sampled_from([1, 3, 5]))
+            stride = data.draw(st.sampled_from([1, 1, 2]))
+            pad = 0 if j == 0 else data.draw(st.integers(0, 2))
+            spec = ConvSpec(c_in=c, c_out=c, h_in=size + 2 * pad,
+                            w_in=size + 2 * pad, kernel=kernel, stride=stride)
+            if spec.w_out < 2:
+                return  # degenerate chain
+            specs.append(spec)
+            pads.append(pad)
+            size = spec.w_out
+        w_o = specs[-1].w_out
+        b_o = data.draw(st.integers(1, w_o))
+        a_o = data.draw(st.integers(0, b_o - 1))
+        try:
+            steps = chain_steps(specs, pads, a_o, b_o)
+        except ValueError:
+            return  # a slice fell entirely into the pad region: rejected
+        # independent fold: apply eq. 2 one layer at a time, clipping at
+        # the pad region exactly as the runtime must
+        a, b = a_o, b_o
+        for j in range(depth - 1, -1, -1):
+            s = specs[j]
+            A, B = a * s.stride, (b - 1) * s.stride + s.kernel  # eq. 2
+            if j == 0:
+                assert (steps[0].a_i, steps[0].b_i) == (A, B)
+                assert steps[0].lz == steps[0].rz == 0
+            else:
+                p = pads[j]
+                lo, hi = max(0, A - p), min(specs[j - 1].w_out, B - p)
+                assert (steps[j].a_i, steps[j].b_i) == (lo, hi)
+                assert steps[j].lz == lo - (A - p)
+                assert steps[j].rz == (B - p) - hi
+                a, b = lo, hi
+
+    @given(k=st.integers(1, 8), data=st.data())
+    @settings(max_examples=30, deadline=None)
+    def test_depth1_split_matches_plan_width_split(self, k, data):
+        size = data.draw(st.integers(k + 2, 48))
+        stride = data.draw(st.sampled_from([1, 2]))
+        spec = ConvSpec(c_in=3, c_out=4, h_in=size, w_in=size,
+                        kernel=3, stride=stride)
+        if spec.w_out < k:
+            return
+        seg = plan_segment_split([spec], [1], k)
+        ref = plan_width_split(spec, k)
+        for cp, p in zip(seg.parts, ref.parts):
+            st0 = cp.steps[0]
+            assert (st0.a_i, st0.b_i, st0.a_o, st0.b_o) == (
+                p.a_i, p.b_i, p.a_o, p.b_o)
+        assert (seg.remainder is None) == (ref.remainder is None)
+
+
+class TestExecutorSegments:
+    """Multi-layer pieces on the worker pool: k-th-arrival decode and
+    cancellation at segment granularity, per-layer stage telemetry."""
+
+    def _run(self, scheme, fault_plan=None, n_workers=4):
+        specs, pads, acts = _relu_chain(2, 20)
+        x, ws = _rand_segment(jax.random.PRNGKey(7), specs)
+        ref = _ref_chain(x, ws, specs, pads, acts)
+        lsz = segment_layer_sizes(specs, pads, scheme)
+        delay = SegmentDelay(WIFI, lsz, seed=5)
+        with CodedExecutor(n_workers, clock=FakeClock(), delay_model=delay,
+                           fault_plan=fault_plan or FaultPlan()) as ex:
+            out = run_segment(x, ws, scheme, specs, pads, acts, executor=ex)
+            report = ex.last_report
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+        return report
+
+    def test_straggler_cancelled_at_segment_granularity(self):
+        # 3 workers so each source's two replicas land on DIFFERENT
+        # workers (round-robin on 4 would co-locate both copies of a
+        # source on the straggler and force a wait on it)
+        scheme = get_scheme("replication")(8)
+        report = self._run(scheme, FaultPlan(straggler={0: 50.0}),
+                           n_workers=3)
+        # the straggling worker's chain pieces never land in the subset
+        assert all(report.assignment[p] != 0 for p in report.subset)
+        assert report.cancelled
+
+    def test_dead_worker_absorbed_by_redundancy(self):
+        scheme = get_scheme("replication")(8)
+        report = self._run(scheme, FaultPlan(dead=frozenset({1})))
+        assert report.failures and report.failures[0][0] == 1
+
+    def test_stage_telemetry_per_layer(self):
+        scheme = get_scheme("uncoded")(4)
+        report = self._run(scheme)
+        assert report.timings
+        for t in report.timings:
+            assert len(t.stages) == 2  # one stage per chain layer
+            assert sum(t.stages) == pytest.approx(t.t_compute, rel=1e-9)
+
+    def test_stages_feed_adaptive_planner_per_layer(self):
+        """A depth-d segment run yields d estimator samples per piece."""
+        from repro.dist import AdaptiveExecutor
+
+        specs, pads, acts = _relu_chain(2, 20)
+        x, ws = _rand_segment(jax.random.PRNGKey(9), specs)
+        scheme = get_scheme("replication")(6)
+        lsz = segment_layer_sizes(specs, pads, scheme)
+        with AdaptiveExecutor(3, prior=WIFI, clock=FakeClock(),
+                              delay_model=SegmentDelay(WIFI, lsz, seed=2),
+                              probe_every=0) as ex:
+            ex.arm_observation(per_layer_sizes(lsz))
+            run_segment(x, ws, scheme, specs, pads, acts, executor=ex)
+            bank = ex.planner.bank
+            n_samples = sum(p.n_observed for p in bank.profiles.values())
+            pieces = len(ex.last_report.timings)
+        assert n_samples == 2 * pieces  # one observation per piece-layer
+
+
+class TestEngineSegmentServing:
+    def test_segment_ffn_identical_generations(self):
+        import dataclasses
+
+        from repro.configs import smoke_config
+        from repro.serving import Engine, Request
+
+        cfg = dataclasses.replace(smoke_config("internvl2-1b"),
+                                  frontend="none")
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 10,
+                                                   dtype=np.int32),
+                        max_new=3) for i in range(2)]
+        plain = Engine(cfg, seed=0)
+        seg = Engine(cfg, params=plain.params, coded=(6, 3),
+                     scheme="replication", segment=True)
+        a, b = plain.generate(reqs), seg.generate(reqs)
+        assert all((x.tokens == y.tokens).all() for x, y in zip(a, b))
+
+    def test_segment_rejects_linear_mix(self):
+        import dataclasses
+
+        from repro.configs import smoke_config
+        from repro.serving import Engine
+
+        cfg = dataclasses.replace(smoke_config("internvl2-1b"),
+                                  frontend="none")
+        with pytest.raises(ValueError, match="linear mix"):
+            Engine(cfg, coded=(6, 3), scheme="mds", segment=True)
+
+    def test_ffn_segment_boundary_ops(self):
+        """One FFN = 2 boundary ops fused vs 6 per-GEMM (gated FFN)."""
+        import dataclasses
+
+        from repro.configs import smoke_config
+        from repro.models.model import _ffn, init_params
+
+        cfg = dataclasses.replace(smoke_config("internvl2-1b"),
+                                  frontend="none", unstacked_exec=True,
+                                  coded_n=6, coded_k=3,
+                                  coded_scheme="replication")
+        p = init_params(cfg, jax.random.PRNGKey(0))
+        layer0 = p["layers"][0] if isinstance(p["layers"], list) else \
+            jax.tree_util.tree_map(lambda a: a[0], p["layers"])
+        ffn_p = layer0["ffn"] if "ffn" in layer0 else layer0
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model),
+                              jnp.float32)
+        cfg_seg = dataclasses.replace(cfg, coded_segment=True)
+        with boundary_op_counter() as seg_ops:
+            y_seg = _ffn(cfg_seg, ffn_p, x)
+        with boundary_op_counter() as gemm_ops:
+            y_gemm = _ffn(cfg, ffn_p, x)
+        assert seg_ops == {"encode": 1, "decode": 1}
+        assert gemm_ops["encode"] == gemm_ops["decode"] == 3
+        np.testing.assert_allclose(np.asarray(y_seg, np.float32),
+                                   np.asarray(y_gemm, np.float32),
+                                   atol=1e-5)
