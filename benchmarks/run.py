@@ -20,6 +20,7 @@ def main() -> None:
         kernels_micro,
         pipeline_depth,
         roofline,
+        serving_load,
         sim_speedup,
         table1_k_approx,
     )
@@ -37,6 +38,7 @@ def main() -> None:
         ("ext_hetero", ext_hetero.run),
         ("adaptive", adaptive_replan.run),
         ("pipeline", pipeline_depth.run),
+        ("serving", serving_load.run),
         ("kernels", kernels_micro.run),
         ("roofline", roofline.run),
         ("sim_speedup", sim_speedup.run),

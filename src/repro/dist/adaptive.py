@@ -29,7 +29,12 @@ Telemetry -> fit -> re-plan:
 ``CodedExecutor`` interface so `Engine(adaptive=True)` re-plans every
 coded GEMM: `models.model._matmul` asks :meth:`AdaptiveExecutor.plan_matmul`
 for the (possibly re-solved) scheme and assignment, and every completed
-run is observed automatically.
+run is observed automatically.  Continuous batching (DESIGN.md §10)
+changes nothing here by design: a co-scheduled step's stacked (B, d)
+GEMMs are still planned per call via ``plan_matmul`` (the token count is
+just B·T instead of one request's), and the batched pieces' timings feed
+the same per-worker profiles — pinned by
+tests/test_serving_sched.py::TestAdaptiveFeeding.
 """
 from __future__ import annotations
 

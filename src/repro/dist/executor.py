@@ -71,6 +71,13 @@ class CodedExecutor:
                              f"{pool.n_workers}")
         self.pool = pool
         self.last_report: RunReport | None = None
+        # total coded runs this executor has issued; with pool.dispatch_count
+        # this gives dispatches-per-run, the batching amortization evidence
+        self.run_count = 0
+        # optional per-run sink: called with each completed RunReport.  The
+        # serving scheduler hooks this to credit every run's (virtual)
+        # completion time and dispatch cost to the step that issued it.
+        self.on_report: Callable[[RunReport], None] | None = None
 
     def close(self) -> None:
         self.pool.close()
@@ -141,6 +148,9 @@ class CodedExecutor:
             viable=lambda ids: scheme.decodable(ids),
         )
         self.last_report = report
+        self.run_count += 1
+        if self.on_report is not None:
+            self.on_report(report)
         subset = report.subset
         stacked = jnp.stack([jnp.asarray(results[i]) for i in subset])
         piece_shape = stacked.shape[1:]

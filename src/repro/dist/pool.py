@@ -176,6 +176,12 @@ class WorkerPool:
         self.fault_plan = fault_plan or FaultPlan()
         self.time_scale = float(time_scale)
         self.timeout_s = float(timeout_s)
+        # cumulative pieces handed to worker inboxes (initial dispatch +
+        # re-dispatch after failures), across every run of this pool.  The
+        # serving scheduler snapshots deltas of this to PROVE the batched-
+        # dispatch claim on real runs: B co-scheduled requests share one
+        # n-piece dispatch, so a step costs n pieces, not B*n.
+        self.dispatch_count = 0
         self._run_lock = threading.Lock()
         self._epoch = 0
         self._events: queue.Queue[_Event] = queue.Queue()
@@ -332,6 +338,7 @@ class WorkerPool:
             for w in range(self.n_workers):
                 for i in sorted(st.pending[w]):
                     self._inbox[w].put((ctx, Piece(i, thunks[i])))
+                    self.dispatch_count += 1
             while True:
                 done = self._drain_safe(st, until, viable, report, ctx)
                 if done is not None:
@@ -473,4 +480,5 @@ class WorkerPool:
             report.redispatched.append((p, src, tgt))
             self._inbox[tgt].put(
                 (ctx, Piece(p, st.thunks[p], not_before=t_detect)))
+            self.dispatch_count += 1
         st.lost.clear()

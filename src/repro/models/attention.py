@@ -118,7 +118,9 @@ def decode_attention(
     """One-token attention over a ring KV cache.
 
     q: (B, 1, H, P); caches: (B, S, K, P); pos: scalar int32 (the absolute
-    position of the new token).  Slots carry RoPE'd keys, so softmax is
+    position of the new token), or (B,) per-request positions when the
+    batch lanes sit at different depths (continuous batching,
+    serving/scheduler.py).  Slots carry RoPE'd keys, so softmax is
     order-agnostic; the mask only hides never-written slots.
     Returns (B, 1, H, P).
     """
@@ -129,8 +131,13 @@ def decode_attention(
     qr = q.reshape(B, 1, K, G, P)
     s = jnp.einsum("bqkgp,bskp->bkgqs", qr, k_cache,
                    preferred_element_type=jnp.float32) * scale
-    valid = (jnp.arange(S) <= pos) | (pos >= S)  # ring: all valid after wrap
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pos = jnp.asarray(pos)
+    if pos.ndim:  # (B,): per-lane ring validity
+        valid = (jnp.arange(S)[None] <= pos[:, None]) | (pos[:, None] >= S)
+        valid = valid[:, None, None, None, :]
+    else:
+        valid = ((jnp.arange(S) <= pos) | (pos >= S))[None, None, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqs,bskp->bqkgp", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)

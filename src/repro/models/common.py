@@ -37,8 +37,12 @@ def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
 
 
 def rope_at(x: jax.Array, pos: jax.Array, theta: float = 1e4) -> jax.Array:
-    """RoPE for one decode step. x: (B, 1, H, P); pos: scalar int."""
-    return rope(x, jnp.asarray(pos)[None], theta)
+    """RoPE for one decode step. x: (B, 1, H, P); pos: scalar int, or (B,)
+    per-request positions (a continuous batch whose lanes are at different
+    sequence depths — serving/scheduler.py)."""
+    pos = jnp.asarray(pos)
+    positions = pos[:, None] if pos.ndim else pos[None]  # (B, 1) | (1,)
+    return rope(x, positions, theta)
 
 
 def he_init(key, shape, dtype=jnp.bfloat16, fan_in=None):

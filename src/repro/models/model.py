@@ -545,8 +545,13 @@ def _attn_decode(cfg: ModelConfig, p: dict, x: jax.Array, kv: dict,
     k = rope_at(k, pos, cfg.rope_theta)
     S = kv["k"].shape[1]
     slot = pos % S
-    k_cache = jax.lax.dynamic_update_slice_in_dim(kv["k"], k, slot, 1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(kv["v"], v, slot, 1)
+    if jnp.ndim(pos):  # (B,) per-lane positions: each lane writes its own slot
+        lanes = jnp.arange(B)
+        k_cache = kv["k"].at[lanes, slot].set(k[:, 0])
+        v_cache = kv["v"].at[lanes, slot].set(v[:, 0])
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(kv["k"], k, slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(kv["v"], v, slot, 1)
     o = decode_attention(q, k_cache, v_cache, pos)
     out = jnp.einsum("bthp,hpd->btd", o, p["wo"])
     return out, {"k": k_cache, "v": v_cache}
@@ -575,7 +580,12 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
     """One serving step: next-token logits given a populated cache.
 
     token: (B, 1) int32 or embed: (B, 1, D).  Returns (logits (B, 1, V),
-    updated cache).
+    updated cache).  ``cache["pos"]`` may be a scalar (classic closed
+    batch: every row at the same depth) or a (B,) vector of per-request
+    positions — the continuous-batching scheduler merges lanes prefilled
+    at different times into one batch, so each lane ropes/masks/writes at
+    its own depth while sharing the step's GEMMs (and with them a single
+    coded dispatch; serving/scheduler.py).
     """
     x = _embed_in(cfg, params, token, embed)
     pos = cache["pos"]

@@ -1,3 +1,14 @@
-from .engine import Engine, Request, Completion
+from .engine import Engine, Request, Completion, cache_cat, cache_take
+from .metrics import percentiles, summarize
+from .scheduler import (RequestRecord, ServeResult, ServingScheduler,
+                        StepRecord)
+from .traffic import (ArrivalProcess, BurstyArrivals, LengthDist,
+                      PoissonArrivals, TraceArrivals, Workload)
 
-__all__ = ["Engine", "Request", "Completion"]
+__all__ = [
+    "Engine", "Request", "Completion", "cache_cat", "cache_take",
+    "ServingScheduler", "ServeResult", "RequestRecord", "StepRecord",
+    "percentiles", "summarize",
+    "ArrivalProcess", "PoissonArrivals", "BurstyArrivals", "TraceArrivals",
+    "LengthDist", "Workload",
+]

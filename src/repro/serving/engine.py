@@ -19,10 +19,21 @@ testbed.  ``adaptive=True`` additionally closes the telemetry loop
 allocation from live (mu, theta) profiles fitted on the pool's per-piece
 timings, so serving re-plans per layer as stragglers drift.
 
-Latency accounting is per request: ``latency_s`` measures from the
-``generate()`` call to that request's last token (so requests queued
-behind earlier buckets correctly include their wait), ``first_token_s``
-to its first generated token.
+Latency accounting is per request: ``latency_s`` measures from
+``max(Request.arrival_s, generate() entry)`` to that request's last
+token (so requests queued behind earlier buckets correctly include their
+wait, and a request whose arrival timestamp lands *inside* the batch
+window is not billed for time before it existed), ``first_token_s`` to
+its first generated token.  Buckets are processed in arrival order of
+their earliest request — not dict-insertion order — so a request's
+latency does not depend on which bucket key happened to appear first in
+the input sequence.
+
+``generate()`` serves one closed batch; open-loop serving (requests
+*arriving* over time, admission into a running decode batch, SLO
+accounting from arrival) lives in :mod:`repro.serving.scheduler`, built
+on the step-level API here (``prefill_batch``/``decode_batch`` +
+``cache_cat``/``cache_take``).
 """
 from __future__ import annotations
 
@@ -38,7 +49,7 @@ import numpy as np
 from ..models import decode_step, init_params, prefill
 from ..models.model import ModelConfig, coded_executor
 
-__all__ = ["Request", "Completion", "Engine"]
+__all__ = ["Request", "Completion", "Engine", "cache_cat", "cache_take"]
 
 
 @dataclasses.dataclass
@@ -46,14 +57,19 @@ class Request:
     rid: int
     prompt: np.ndarray  # (T,) int32 token ids
     max_new: int = 16
+    # when the request entered the system, on the caller's clock (0.0 =
+    # "at the generate() call", the pre-scheduler behaviour).  The traffic
+    # generator stamps virtual-time arrivals here; latencies are measured
+    # from max(arrival_s, generate() entry) so queue delay is honest.
+    arrival_s: float = 0.0
 
 
 @dataclasses.dataclass
 class Completion:
     rid: int
     tokens: np.ndarray  # generated ids
-    latency_s: float        # generate() entry -> this request's last token
-    first_token_s: float = 0.0  # generate() entry -> its first token
+    latency_s: float        # max(arrival, generate() entry) -> last token
+    first_token_s: float = 0.0  # same reference -> its first token
 
 
 class Engine:
@@ -150,14 +166,66 @@ class Engine:
         out: list[Completion] = []
         # bucket by (prompt length, max_new) for exact equal-length batching
         buckets: dict[tuple, list[Request]] = {}
-        for r in requests:
-            buckets.setdefault((len(r.prompt), r.max_new), []).append(r)
+        first_seen: dict[tuple, int] = {}
+        for i, r in enumerate(requests):
+            key = (len(r.prompt), r.max_new)
+            buckets.setdefault(key, []).append(r)
+            first_seen.setdefault(key, i)
+        # buckets run serially, so their order IS queueing policy: earliest
+        # arrival first (input position breaking ties), never the accident
+        # of which key a dict saw first — otherwise a request's latency_s
+        # would depend on how the caller happened to interleave lengths
+        ordered = sorted(
+            buckets.items(),
+            key=lambda kv: (min(r.arrival_s for r in kv[1]), first_seen[kv[0]]))
         with self._executor_ctx():
-            for (T, max_new), rs in buckets.items():
+            for (T, max_new), rs in ordered:
                 for i in range(0, len(rs), self.max_batch):
                     chunk = rs[i : i + self.max_batch]
                     out.extend(self._run_batch(chunk, T, max_new, t0))
         return sorted(out, key=lambda c: c.rid)
+
+    # -- step-level API (continuous batching, serving/scheduler.py) --------
+    #
+    # One closed `generate()` call owns its whole batch; the scheduler
+    # instead *joins* requests into a running decode batch as they arrive
+    # and *retires* them at EOS/max_new.  These primitives expose exactly
+    # one model step each; the scheduler composes them with cache_cat /
+    # cache_take for lane membership.  Callers are responsible for entering
+    # `executor_ctx()` around a step so coded GEMMs reach the pool.
+
+    def executor_ctx(self):
+        """Route this thread's coded GEMMs through the engine's executor
+        (a no-op context when the engine runs without one)."""
+        return self._executor_ctx()
+
+    def prefill_batch(self, prompts: np.ndarray, max_seq: int
+                      ) -> tuple[np.ndarray, dict]:
+        """Prefill b equal-length prompts: (b, T) int32 -> ((b,) first
+        generated tokens, cache with per-lane (b,) positions).
+
+        The cache is sized for ``max_seq`` so lanes prefilled at different
+        times concatenate into one running batch (all lanes must share one
+        ring size).
+        """
+        toks = jnp.asarray(prompts, jnp.int32)
+        b, T = toks.shape
+        logits, cache = self._prefill(self.params, toks, max_seq)
+        nxt = jnp.argmax(logits[..., : self.cfg.vocab], -1).astype(jnp.int32)
+        cache = {**cache, "pos": jnp.full((b,), T, jnp.int32)}
+        return np.asarray(nxt)[:, 0], cache
+
+    def decode_batch(self, cache: dict, tokens: np.ndarray
+                     ) -> tuple[np.ndarray, dict]:
+        """One decode step for the whole running batch: (B,) last tokens ->
+        ((B,) next tokens, updated cache).  Lanes may sit at different
+        positions (vector ``cache["pos"]``); the step's FFN GEMMs see the
+        stacked (B, d) token batch, so a coded engine issues ONE dispatch
+        per GEMM covering every request in the step."""
+        toks = jnp.asarray(tokens, jnp.int32)[:, None]
+        logits, cache = self._decode(self.params, cache, toks)
+        nxt = jnp.argmax(logits[..., : self.cfg.vocab], -1).astype(jnp.int32)
+        return np.asarray(nxt)[:, 0], cache
 
     def _run_batch(self, chunk: list[Request], T: int, max_new: int,
                    t0: float):
@@ -179,5 +247,55 @@ class Engine:
             t_first = dt
         gen = (np.stack(generated, axis=1) if generated
                else np.zeros((len(chunk), 0), np.int32))  # (B, max_new)
-        return [Completion(r.rid, gen[j], dt, t_first)
-                for j, r in enumerate(chunk)]
+        # per-request reference: max(arrival, generate() entry).  A request
+        # stamped as arriving mid-batch is not billed for time before it
+        # existed; the default arrival_s=0.0 reproduces entry-relative
+        # latencies exactly.  Clamped so first <= latency and both >= 0.
+        out = []
+        for j, r in enumerate(chunk):
+            shift = min(max(r.arrival_s - t0, 0.0), dt)
+            out.append(Completion(r.rid, gen[j], dt - shift,
+                                  max(t_first - shift, 0.0)))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# cache membership: join/leave for continuous batching
+# ---------------------------------------------------------------------------
+# A running-batch cache is the same pytree prefill/decode_step already use,
+# with `pos` widened to a (B,) vector.  Stacked archs keep a leading layer
+# dim on every leaf (batch axis 1); hybrid/unstacked archs keep a per-layer
+# list (batch axis 0) — detected from the tree shape, not a flag, so the
+# utilities work on any cache the engine can produce.
+
+
+def _batch_axis(cache: dict) -> int:
+    return 1 if isinstance(cache["layers"], dict) else 0
+
+
+def cache_cat(caches: Sequence[dict]) -> dict:
+    """Concatenate running-batch caches along the lane axis (join)."""
+    if not caches:
+        raise ValueError("cache_cat needs at least one cache")
+    if len(caches) == 1:
+        # still normalize pos to the (B,) lane vector the multi-cache path
+        # produces, so downstream rank never depends on how many joined
+        return {"layers": caches[0]["layers"],
+                "pos": jnp.atleast_1d(caches[0]["pos"])}
+    axis = _batch_axis(caches[0])
+    layers = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=axis),
+        *(c["layers"] for c in caches))
+    pos = jnp.concatenate([jnp.atleast_1d(c["pos"]) for c in caches])
+    return {"layers": layers, "pos": pos}
+
+
+def cache_take(cache: dict, lanes: Sequence[int]) -> dict:
+    """Keep only ``lanes`` (in the given order) of a running-batch cache —
+    how finished requests leave the batch."""
+    idx = jnp.asarray(list(lanes), jnp.int32)
+    axis = _batch_axis(cache)
+    layers = jax.tree_util.tree_map(
+        lambda x: jnp.take(x, idx, axis=axis), cache["layers"])
+    pos = jnp.take(jnp.atleast_1d(cache["pos"]), idx)
+    return {"layers": layers, "pos": pos}

@@ -1,0 +1,96 @@
+"""SLO telemetry for serving-under-load runs (DESIGN.md §10).
+
+Turns a :class:`~repro.serving.scheduler.ServeResult` into the numbers a
+deadline-driven serving story is judged on:
+
+* **TTFT** — arrival -> first token (queue wait + prefill): the metric
+  straggler coding moves, since one slow worker on the prefill path stalls
+  every co-batched request's first token;
+* **TPOT** — steady-state seconds per generated token after the first;
+* **e2e** — arrival -> last token;
+* **goodput** — completed requests *within the deadline SLO* per second
+  (throughput counts garbage; goodput is what an SLO pays for), plus the
+  attainment fraction;
+* **queue/batch timelines** — per-step queue depth and batch occupancy,
+  the honest evidence that an offered load saturates (queue grows) or the
+  scheduler keeps the pool busy (occupancy stays up);
+* **dispatch accounting** — pool pieces and executor runs per step, the
+  measured form of the batched-dispatch claim (n pieces per coded GEMM per
+  step, never B·n).
+
+All percentiles use numpy's linear interpolation and are pinned by tests
+on deterministic virtual-clock runs.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .scheduler import ServeResult
+
+__all__ = ["percentiles", "summarize"]
+
+PCTS = (50.0, 95.0, 99.0)
+
+
+def percentiles(xs: Sequence[float], pcts: Sequence[float] = PCTS) -> dict:
+    """{"p50": ..., "p95": ..., "p99": ...} (NaN-free; empty -> zeros)."""
+    if len(xs) == 0:
+        return {f"p{int(p)}": 0.0 for p in pcts}
+    arr = np.asarray(list(xs), np.float64)
+    return {f"p{int(p)}": float(np.percentile(arr, p)) for p in pcts}
+
+
+def summarize(result: ServeResult, *, deadline_s: float | None = None,
+              ttft_deadline_s: float | None = None) -> dict:
+    """One load test -> a JSON-ready SLO report.
+
+    ``deadline_s`` is the end-to-end SLO (arrival -> last token) goodput is
+    scored against; ``ttft_deadline_s`` optionally scores first-token
+    attainment separately.  Omitted deadlines skip those entries rather
+    than inventing a default SLO.
+    """
+    recs = result.records
+    steps = result.steps
+    duration = max(result.t_end, 1e-12)
+    n = len(recs)
+    tokens = int(sum(r.n_tokens for r in recs))
+    out: dict = {
+        "requests": n,
+        "duration_s": float(result.t_end),
+        "tokens": tokens,
+        "throughput_rps": n / duration,
+        "throughput_tok_s": tokens / duration,
+        "ttft_s": percentiles([r.ttft_s for r in recs]),
+        "tpot_s": percentiles([r.tpot_s for r in recs if r.n_tokens > 1]),
+        "e2e_s": percentiles([r.e2e_s for r in recs]),
+        "ttft_mean_s": float(np.mean([r.ttft_s for r in recs])) if n else 0.0,
+        "queue_wait_mean_s": (float(np.mean([r.admit_s - r.arrival_s
+                                             for r in recs])) if n else 0.0),
+    }
+    if deadline_s is not None:
+        met = sum(1 for r in recs if r.e2e_s <= deadline_s)
+        out["slo_deadline_s"] = float(deadline_s)
+        out["goodput_rps"] = met / duration
+        out["slo_attainment"] = met / n if n else 0.0
+    if ttft_deadline_s is not None:
+        met = sum(1 for r in recs if r.ttft_s <= ttft_deadline_s)
+        out["ttft_deadline_s"] = float(ttft_deadline_s)
+        out["ttft_attainment"] = met / n if n else 0.0
+    if steps:
+        depth = [s.queue_depth for s in steps]
+        batch = [s.batch for s in steps]
+        out["steps"] = len(steps)
+        out["queue_depth"] = {"mean": float(np.mean(depth)),
+                              "max": int(max(depth))}
+        out["batch_occupancy"] = {"mean": float(np.mean(batch)),
+                                  "max": int(max(batch))}
+        out["queue_timeline"] = [[float(s.t_start), int(s.queue_depth)]
+                                 for s in steps]
+        out["dispatches_total"] = int(sum(s.dispatches for s in steps))
+        out["runs_total"] = int(sum(s.runs for s in steps))
+        busy = [s for s in steps if s.batch > 0]
+        out["dispatches_per_step_mean"] = (
+            float(np.mean([s.dispatches for s in busy])) if busy else 0.0)
+    return out

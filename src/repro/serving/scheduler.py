@@ -1,0 +1,361 @@
+"""Continuous-batching scheduler: serve open-loop traffic (DESIGN.md §10).
+
+``Engine.generate`` owns one closed batch; this module puts a real serving
+loop in front of it.  Requests *arrive* (``Request.arrival_s``, stamped by
+:mod:`repro.serving.traffic`), wait in an admission queue, **join** the
+running decode batch the step after they arrive (join-at-prefill: the
+prefill that admits a lane also emits its first token) and **leave** it at
+EOS/``max_new`` — so the batch composition changes every step instead of
+draining to the slowest request, and per-request latency is accounted from
+*arrival*, not from whenever a closed batch happened to start.
+
+The payoff for coded inference is **batched coded dispatch**: the step's
+decode stacks every lane's token into one (B, d) GEMM, so a coded engine
+issues ONE n-piece pool dispatch per GEMM covering all B co-scheduled
+requests — n pieces per step, not B·n (and a single request's decode
+token, B=1 < k, could not even reach the pool: batching is what buys
+decode-time straggler protection at all).  The claim is *proved on real
+runs*, not asserted from the plan: every step snapshots
+``WorkerPool.dispatch_count`` / ``CodedExecutor.run_count`` deltas into
+its :class:`StepRecord`.
+
+Two time planes, mirroring the pool (dist/clock.py):
+
+* **virtual** — the engine's executor runs on a ``FakeClock``: each model
+  call costs the sum of its pool runs' (virtual) completion times plus
+  ``master_call_s``, and the scheduler advances its own deterministic
+  timeline by exactly that.  Arrivals, queueing, TTFT percentiles, goodput:
+  all bit-reproducible functions of the seeds.
+* **measured** — no executor (or a ``RealClock`` pool): each call costs its
+  wall-clock time on the same relative timeline.  Real, but not
+  deterministic; tests use virtual.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from ..dist.faults import StragglerDrift
+from .engine import Completion, Engine, Request, cache_cat, cache_take
+
+__all__ = ["RequestRecord", "StepRecord", "ServeResult", "ServingScheduler"]
+
+POLICIES = ("fcfs", "shortest_prompt")
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One request's life: arrival -> admission -> first token -> done.
+    All timestamps on the scheduler's timeline (virtual seconds)."""
+
+    rid: int
+    prompt_len: int
+    max_new: int
+    arrival_s: float
+    admit_s: float = 0.0
+    first_token_s: float = 0.0
+    done_s: float = 0.0
+    n_tokens: int = 0
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token, from arrival (queue wait included)."""
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def e2e_s(self) -> float:
+        """Arrival -> last token."""
+        return self.done_s - self.arrival_s
+
+    @property
+    def tpot_s(self) -> float:
+        """Time per output token after the first (0 for 1-token requests)."""
+        if self.n_tokens <= 1:
+            return 0.0
+        return (self.done_s - self.first_token_s) / (self.n_tokens - 1)
+
+
+@dataclasses.dataclass
+class StepRecord:
+    """One co-scheduled step: who ran, what it cost, what the pool did."""
+
+    step: int
+    t_start: float
+    t_end: float
+    batch: int          # lanes decoded this step (after admission)
+    admitted: int       # requests prefilled into the batch this step
+    retired: int        # lanes that finished this step
+    queue_depth: int    # arrived-but-not-admitted after this step's admission
+    dispatches: int     # pool pieces dispatched during the step (counter delta)
+    runs: int           # executor runs issued during the step (counter delta)
+    prefill_dispatches: int = 0  # of `dispatches`, issued by admission prefills
+    prefill_runs: int = 0        # of `runs`, issued by admission prefills
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Everything a load test produces, metrics-ready."""
+
+    records: list[RequestRecord]
+    steps: list[StepRecord]
+    completions: list[Completion]  # Engine-compatible view (latency from arrival)
+    t_end: float
+
+
+@dataclasses.dataclass
+class _Lane:
+    req: Request
+    rec: RequestRecord
+    tokens: list
+
+
+class ServingScheduler:
+    """Continuous batching in front of an :class:`Engine`.
+
+    ``policy`` orders admission from the arrival queue: ``"fcfs"`` (arrival
+    order) or ``"shortest_prompt"`` (SPT among arrived — lower mean wait,
+    starvation-prone at overload; both are load-testable on purpose).
+
+    ``max_seq`` sizes every lane's ring cache; all lanes must share it to
+    concatenate into one batch, so it must cover the workload's longest
+    ``prompt + max_new`` (``Workload.max_seq``).
+
+    ``eos_id`` retires a lane the step its sampled token hits it (the EOS
+    token itself is kept, vLLM-style); ``max_new`` always caps.
+
+    ``master_call_s`` charges a fixed virtual cost per model call (the
+    master's own encode/decode/GEMM work, which pool runs don't see);
+    virtual mode otherwise only advances on pool-run completions.
+
+    ``fault_drift`` re-scripts the pool's :class:`FaultPlan` per *step*
+    (scenario: a worker starts straggling mid-load), and
+    ``delay_seed_stride`` re-seeds a seedable pool delay model every step
+    so round-trips stay stochastic across steps instead of replaying the
+    identical (seed, worker, piece) draw forever.
+    """
+
+    def __init__(self, engine: Engine, *, max_seq: int, max_batch: int = 8,
+                 policy: str = "fcfs", eos_id: int | None = None,
+                 master_call_s: float = 0.0,
+                 fault_drift: StragglerDrift | None = None,
+                 delay_seed_stride: int = 0):
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+        if max_batch < 1:
+            raise ValueError(f"need max_batch >= 1, got {max_batch}")
+        if max_seq < 2:
+            raise ValueError(f"need max_seq >= 2, got {max_seq}")
+        self.engine = engine
+        self.max_seq = int(max_seq)
+        self.max_batch = int(max_batch)
+        self.policy = policy
+        self.eos_id = eos_id
+        self.master_call_s = float(master_call_s)
+        self.fault_drift = fault_drift
+        self.delay_seed_stride = int(delay_seed_stride)
+        ex = engine.executor
+        self._virtual = (ex is not None
+                         and getattr(ex.pool.clock, "virtual", False))
+        self._base_delay = ex.pool.delay_model if ex is not None else None
+
+    # -- internals ---------------------------------------------------------
+    def _timed_call(self, fn: Callable, *args) -> tuple:
+        """Run one model call; return (result, cost_s) on the scheduler's
+        time plane.  Virtual cost = master_call_s + the (virtual)
+        completion time of every pool run the call issued — a gather-all
+        probe is honestly charged its LAST arrival, since that is what the
+        master waited for."""
+        ex = self.engine.executor
+        if ex is None:
+            w0 = time.perf_counter()
+            out = fn(*args)
+            return out, time.perf_counter() - w0
+        runs = []
+        prev = ex.on_report
+        ex.on_report = (lambda r: (runs.append(r),
+                                   prev(r) if prev is not None else None))
+        try:
+            w0 = time.perf_counter()
+            out = fn(*args)
+            wall = time.perf_counter() - w0
+        finally:
+            ex.on_report = prev
+        if not self._virtual:
+            return out, wall
+        dt = self.master_call_s
+        for r in runs:
+            if r.arrivals:
+                dt += max(a.t for a in r.arrivals)
+        return out, dt
+
+    def _arm_step(self, step: int) -> None:
+        """Per-step pool scripting: fault drift + delay reseed."""
+        ex = self.engine.executor
+        if ex is None:
+            return
+        if self.fault_drift is not None:
+            ex.pool.fault_plan = self.fault_drift.plan_at(step)
+        dm = self._base_delay
+        if (self.delay_seed_stride and dm is not None
+                and dataclasses.is_dataclass(dm) and hasattr(dm, "seed")):
+            ex.pool.delay_model = dataclasses.replace(
+                dm, seed=dm.seed + step * self.delay_seed_stride)
+
+    def _admit_order(self, ready: list) -> list:
+        if self.policy == "shortest_prompt":
+            return sorted(ready, key=lambda r: (len(r.prompt), r.arrival_s,
+                                                r.rid))
+        return ready  # fcfs: queue is already (arrival_s, rid)-sorted
+
+    def _counters(self) -> tuple:
+        ex = self.engine.executor
+        if ex is None:
+            return 0, 0
+        return ex.pool.dispatch_count, ex.run_count
+
+    # -- the loop ----------------------------------------------------------
+    def serve(self, requests: Sequence[Request]) -> ServeResult:
+        seen = set()
+        for r in requests:
+            if r.rid in seen:
+                raise ValueError(f"duplicate rid {r.rid}: records and "
+                                 "completions are keyed by rid")
+            seen.add(r.rid)
+            if r.max_new < 1:
+                raise ValueError(f"request {r.rid}: need max_new >= 1 "
+                                 "(prefill-only requests have no tokens to "
+                                 "continuously batch)")
+            if len(r.prompt) + r.max_new > self.max_seq:
+                raise ValueError(
+                    f"request {r.rid}: prompt {len(r.prompt)} + max_new "
+                    f"{r.max_new} exceeds max_seq={self.max_seq}")
+        ex = self.engine.executor
+        if ex is not None:
+            # _arm_step mutates the pool's fault/delay scripting per step;
+            # restore it afterwards so a reused pool's next run (another
+            # arm of a comparison, say) does not inherit this run's last
+            # drift phase or reseeded delay model
+            prev_pool_state = (ex.pool.fault_plan, ex.pool.delay_model)
+        try:
+            return self._serve(requests)
+        finally:
+            if ex is not None:
+                ex.pool.fault_plan, ex.pool.delay_model = prev_pool_state
+
+    def _serve(self, requests: Sequence[Request]) -> ServeResult:
+        queue = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        lanes: list[_Lane] = []
+        cache = None
+        t = 0.0
+        step = 0
+        records: list[RequestRecord] = []
+        steps: list[StepRecord] = []
+        completions: list[Completion] = []
+        with self.engine.executor_ctx():
+            while queue or lanes:
+                if not lanes and queue and queue[0].arrival_s > t:
+                    t = queue[0].arrival_s  # idle system: jump to next arrival
+                t_start = t
+                self._arm_step(step)
+                d0, r0 = self._counters()
+                # -- admission: arrived requests fill the free lanes ------
+                n_ready = 0
+                while (n_ready < len(queue)
+                       and queue[n_ready].arrival_s <= t):
+                    n_ready += 1
+                room = self.max_batch - len(lanes)
+                admit = self._admit_order(queue[:n_ready])[:max(room, 0)]
+                # remove by identity: dataclass equality would compare the
+                # ndarray prompt fields and raise on ambiguous truth value
+                queue = [q for q in queue
+                         if not any(q is r for r in admit)]
+                qdepth = n_ready - len(admit)
+                # -- join-at-prefill (grouped by equal prompt length) -----
+                new_caches = []
+                retired = 0
+                for group in _length_groups(admit):
+                    prompts = np.stack([r.prompt for r in group])
+                    (first, gcache), dt = self._timed_call(
+                        self.engine.prefill_batch, prompts, self.max_seq)
+                    t += dt
+                    glanes = []
+                    for j, r in enumerate(group):
+                        rec = RequestRecord(r.rid, len(r.prompt), r.max_new,
+                                            r.arrival_s, admit_s=t_start,
+                                            first_token_s=t)
+                        lane = _Lane(r, rec, [int(first[j])])
+                        records.append(rec)
+                        glanes.append(lane)
+                    done = [j for j, ln in enumerate(glanes)
+                            if self._finished(ln)]
+                    for j in done:
+                        self._retire(glanes[j], t, completions)
+                        retired += 1
+                    keep = [j for j in range(len(glanes)) if j not in done]
+                    if keep:
+                        lanes.extend(glanes[j] for j in keep)
+                        new_caches.append(
+                            gcache if len(keep) == len(glanes)
+                            else cache_take(gcache, keep))
+                d_pf, r_pf = self._counters()
+                # -- one decode step for the whole running batch ----------
+                n_decoded = len(lanes)
+                if lanes:
+                    parts = ([cache] if cache is not None else []) + new_caches
+                    cache = cache_cat(parts)
+                    last = np.asarray([ln.tokens[-1] for ln in lanes],
+                                      np.int32)
+                    (nxt, cache), dt = self._timed_call(
+                        self.engine.decode_batch, cache, last)
+                    t += dt
+                    for j, ln in enumerate(lanes):
+                        ln.tokens.append(int(nxt[j]))
+                    done = [j for j, ln in enumerate(lanes)
+                            if self._finished(ln)]
+                    for j in done:
+                        self._retire(lanes[j], t, completions)
+                        retired += 1
+                    if done:
+                        keep = [j for j in range(len(lanes)) if j not in done]
+                        lanes = [lanes[j] for j in keep]
+                        cache = cache_take(cache, keep) if keep else None
+                else:
+                    cache = None
+                d1, r1 = self._counters()
+                steps.append(StepRecord(
+                    step, t_start, t, batch=n_decoded,
+                    admitted=len(admit), retired=retired, queue_depth=qdepth,
+                    dispatches=d1 - d0, runs=r1 - r0,
+                    prefill_dispatches=d_pf - d0, prefill_runs=r_pf - r0))
+                step += 1
+        completions.sort(key=lambda c: c.rid)
+        records.sort(key=lambda r: r.rid)
+        return ServeResult(records=records, steps=steps,
+                           completions=completions, t_end=t)
+
+    def _finished(self, lane: _Lane) -> bool:
+        if len(lane.tokens) >= lane.req.max_new:
+            return True
+        return self.eos_id is not None and lane.tokens[-1] == self.eos_id
+
+    @staticmethod
+    def _retire(lane: _Lane, t: float, completions: list) -> None:
+        lane.rec.done_s = t
+        lane.rec.n_tokens = len(lane.tokens)
+        completions.append(Completion(
+            lane.req.rid, np.asarray(lane.tokens, np.int32),
+            latency_s=t - lane.req.arrival_s,
+            first_token_s=lane.rec.first_token_s - lane.req.arrival_s))
+
+
+def _length_groups(admitted: Sequence[Request]) -> list:
+    """Partition admitted requests into equal-prompt-length groups (the
+    functional prefill has no padding mask), preserving admission order
+    within each group."""
+    groups: dict[int, list] = {}
+    for r in admitted:
+        groups.setdefault(len(r.prompt), []).append(r)
+    return list(groups.values())

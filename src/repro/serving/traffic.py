@@ -1,0 +1,195 @@
+"""Open-loop traffic generation for serving-under-load (DESIGN.md §10).
+
+The north star serves *arriving* requests, not pre-collected batches — and
+straggler coding is precisely a tail-latency story, so the workload must
+be open-loop: arrivals keep coming at the offered rate whether or not the
+system keeps up (a closed loop would throttle itself and hide the queue).
+
+Everything here is **virtual-time first**: an arrival process emits plain
+float timestamps (seconds from 0) that the continuous-batching scheduler
+replays on its own deterministic timeline — the same time plane as
+``dist/clock.py``'s ``FakeClock`` pool runs — so an entire load test is a
+pure function of its seeds.  Three processes cover the classic shapes:
+
+* :class:`PoissonArrivals` — memoryless open-loop traffic at a fixed rate
+  (the M/·/· baseline every serving paper sweeps);
+* :class:`BurstyArrivals`  — a two-state Markov-modulated Poisson process
+  (calm/burst phases with exponential dwell times), the standard model for
+  flash crowds;
+* :class:`TraceArrivals`   — replay explicit timestamps (production traces,
+  adversarial hand-built patterns, regression pins).
+
+Prompt and generation lengths come from seedable :class:`LengthDist`
+discrete distributions; :class:`Workload` composes process + lengths into
+a stream of :class:`~repro.serving.engine.Request` objects with
+``arrival_s`` stamped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from .engine import Request
+
+__all__ = [
+    "ArrivalProcess",
+    "PoissonArrivals",
+    "BurstyArrivals",
+    "TraceArrivals",
+    "LengthDist",
+    "Workload",
+]
+
+
+@runtime_checkable
+class ArrivalProcess(Protocol):
+    """Emits ``n`` arrival timestamps (seconds, non-decreasing, from 0)."""
+
+    def arrival_times(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals:
+    """Open-loop Poisson arrivals at ``rate`` requests/second."""
+
+    rate: float
+
+    def __post_init__(self):
+        if self.rate <= 0.0:
+            raise ValueError(f"need rate > 0, got {self.rate}")
+
+    def arrival_times(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        gaps = rng.exponential(1.0 / self.rate, size=n)
+        return np.cumsum(gaps)
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstyArrivals:
+    """Two-state MMPP: exponential dwell in a calm phase at ``rate_calm``,
+    then a burst phase at ``rate_burst`` — flash-crowd traffic whose
+    *average* rate matches no single Poisson process.
+
+    ``mean_calm_s`` / ``mean_burst_s`` are the expected phase durations.
+    """
+
+    rate_calm: float
+    rate_burst: float
+    mean_calm_s: float
+    mean_burst_s: float
+
+    def __post_init__(self):
+        if min(self.rate_calm, self.rate_burst) <= 0.0:
+            raise ValueError("both phase rates must be > 0")
+        if min(self.mean_calm_s, self.mean_burst_s) <= 0.0:
+            raise ValueError("both phase dwell times must be > 0")
+
+    def arrival_times(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        out: list[float] = []
+        t = 0.0
+        burst = False
+        while len(out) < n:
+            rate = self.rate_burst if burst else self.rate_calm
+            dwell = rng.exponential(
+                self.mean_burst_s if burst else self.mean_calm_s)
+            end = t + dwell
+            while len(out) < n:
+                t += rng.exponential(1.0 / rate)
+                if t >= end:
+                    t = end  # unused gap dies with the phase (memoryless)
+                    break
+                out.append(t)
+            burst = not burst
+        return np.asarray(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceArrivals:
+    """Replay explicit timestamps (a production trace or a hand-built
+    regression pattern).  ``times`` must be non-decreasing; asking for more
+    arrivals than the trace holds is an error, not a silent wrap."""
+
+    times: tuple
+
+    def __post_init__(self):
+        ts = [float(t) for t in self.times]
+        if any(b < a for a, b in zip(ts, ts[1:])):
+            raise ValueError("trace times must be non-decreasing")
+
+    def arrival_times(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        if n > len(self.times):
+            raise ValueError(
+                f"trace holds {len(self.times)} arrivals, asked for {n}")
+        return np.asarray([float(t) for t in self.times[:n]])
+
+
+@dataclasses.dataclass(frozen=True)
+class LengthDist:
+    """Discrete length distribution: ``values`` with optional ``probs``
+    (uniform when omitted).  Values are drawn with a generator passed in by
+    the workload, so streams are reproducible end to end."""
+
+    values: tuple
+    probs: tuple | None = None
+
+    def __post_init__(self):
+        if not self.values:
+            raise ValueError("LengthDist needs at least one value")
+        if any(int(v) < 1 for v in self.values):
+            raise ValueError(f"lengths must be >= 1, got {self.values}")
+        if self.probs is not None:
+            if len(self.probs) != len(self.values):
+                raise ValueError("probs must match values one-to-one")
+            if abs(sum(self.probs) - 1.0) > 1e-9:
+                raise ValueError(f"probs must sum to 1, got {sum(self.probs)}")
+
+    @classmethod
+    def fixed(cls, value: int) -> "LengthDist":
+        return cls(values=(int(value),))
+
+    @property
+    def max_value(self) -> int:
+        return max(int(v) for v in self.values)
+
+    def sample(self, rng: np.random.Generator) -> int:
+        if len(self.values) == 1:
+            return int(self.values[0])
+        return int(rng.choice(np.asarray(self.values, np.int64),
+                              p=self.probs))
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Arrival process x prompt/generation length distributions -> a
+    reproducible open-loop request stream.
+
+    ``generate(n)`` returns ``n`` :class:`Request` objects ordered by
+    ``arrival_s``; prompt token ids are drawn uniformly from
+    ``[0, vocab)``.  Everything derives from ``seed`` alone.
+    """
+
+    arrivals: ArrivalProcess
+    prompt_len: LengthDist
+    max_new: LengthDist
+    vocab: int = 256
+    seed: int = 0
+
+    @property
+    def max_seq(self) -> int:
+        """Longest prompt + generation this workload can emit — what the
+        scheduler's shared ring caches must be sized for."""
+        return self.prompt_len.max_value + self.max_new.max_value
+
+    def generate(self, n: int) -> list[Request]:
+        rng = np.random.default_rng(self.seed)
+        times = self.arrivals.arrival_times(n, rng)
+        out = []
+        for rid in range(n):
+            T = self.prompt_len.sample(rng)
+            m = self.max_new.sample(rng)
+            prompt = rng.integers(0, self.vocab, size=T, dtype=np.int64)
+            out.append(Request(rid=rid, prompt=prompt.astype(np.int32),
+                               max_new=m, arrival_s=float(times[rid])))
+        return out

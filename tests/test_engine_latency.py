@@ -72,3 +72,50 @@ def test_completion_defaults_keep_compat():
     # older call sites construct Completion without first_token_s
     c = Completion(0, np.zeros(1, np.int32), 1.0)
     assert c.first_token_s == 0.0
+
+
+def test_request_arrival_default_keeps_compat():
+    # older call sites construct Request without arrival_s; latencies then
+    # measure from generate() entry exactly as before
+    r = Request(0, np.arange(4, dtype=np.int32))
+    assert r.arrival_s == 0.0
+
+
+def test_buckets_run_in_arrival_order(engine):
+    # ISSUE 5 satellite: the bucket whose earliest request ARRIVED first
+    # must run first, even when another bucket's key appears first in the
+    # input sequence.  Here rid 0 (len-4 bucket) is listed first but
+    # arrived later; rid 1's len-7 bucket must be served first.
+    late = Request(0, np.arange(4, dtype=np.int32), max_new=4,
+                   arrival_s=50.0)
+    early = Request(1, np.arange(7, dtype=np.int32), max_new=4,
+                    arrival_s=1.0)
+    by_rid = {c.rid: c for c in engine.generate([late, early])}
+    c_late, c_early = by_rid[0], by_rid[1]
+    assert c_early.latency_s < c_late.latency_s
+    assert c_late.first_token_s >= c_early.latency_s
+
+
+def test_bucket_order_ties_fall_back_to_input_order(engine):
+    # equal arrivals (the default 0.0): first-seen key runs first, the
+    # pre-fix behaviour
+    c0, c1 = engine.generate(_reqs())
+    assert c1.latency_s > c0.latency_s
+
+
+def test_mid_batch_arrival_not_billed_for_preexisting_wait(engine):
+    # a request stamped as arriving AFTER generate() entry measures from
+    # its arrival (max(arrival, t0)), so it reports strictly less latency
+    # than a batch-equal peer that was present from the start
+    import time
+
+    # a generous margin keeps this robust: construction between this stamp
+    # and generate()'s t0 is microseconds, and even if the batch finishes
+    # before the stamped arrival the shift clamps at dt (latency 0 < peer)
+    arrival = time.perf_counter() + 5e-3
+    reqs = [Request(0, np.arange(5, dtype=np.int32), max_new=3),
+            Request(1, np.arange(5, dtype=np.int32), max_new=3,
+                    arrival_s=arrival)]
+    c0, c1 = engine.generate(reqs)
+    assert c1.latency_s < c0.latency_s
+    assert 0.0 <= c1.first_token_s <= c1.latency_s
