@@ -62,10 +62,16 @@ QUICK_SMALL_PARAMS = SystemParams(
 
 
 def executed_latency(plan: NetPlan, convs, x, params, n_workers: int,
-                     seed: int) -> tuple[float, dict]:
+                     seed: int, streamed: bool = False
+                     ) -> tuple[float, dict, "np.ndarray"]:
     """Walk the plan on a FakeClock worker pool; return (virtual end-to-end
-    seconds, counted boundary ops).  Master encode/decode ride on top at
-    their mean durations; local steps at the master's compute rate."""
+    seconds, counted boundary ops, final activations).  Master
+    encode/decode ride on top at their mean durations; local steps at the
+    master's compute rate.  ``streamed`` ships each segment's entry/exit
+    in ``SegmentStep.chunks`` column chunks (DESIGN.md §11): the SAME rng
+    world, but each piece's round trip is the pipelined chunk timeline
+    instead of the serial stage sum — and the decoded output must be
+    bit-identical."""
     total = 0.0
     with CodedExecutor(n_workers, clock=FakeClock(), timeout_s=600.0) as ex, \
             boundary_op_counter() as ops:
@@ -76,13 +82,16 @@ def executed_latency(plan: NetPlan, convs, x, params, n_workers: int,
             if isinstance(step, SegmentStep):
                 specs = [li.spec for li in sub]
                 pads = [li.pad for li in sub]
+                chunks = step.chunks if streamed else 1
                 lsz = segment_layer_sizes(specs, pads, step.scheme,
                                           step.split)
                 ex.pool.delay_model = SegmentDelay(params, lsz,
-                                                   seed=seed + step.start)
+                                                   seed=seed + step.start,
+                                                   chunks=chunks)
                 y = run_segment(_pad_hw(h, sub[0].pad), ws, step.scheme,
                                 specs, pads, [li.act for li in sub],
-                                split=step.split, executor=ex)
+                                split=step.split, executor=ex,
+                                stream_chunks=chunks)
                 sizes, _ = segment_sizes(specs, pads, step.scheme, step.split)
                 total += (sizes.n_enc + sizes.n_dec) * (1.0 / params.mu_m
                                                         + params.theta_m)
@@ -93,7 +102,7 @@ def executed_latency(plan: NetPlan, convs, x, params, n_workers: int,
                     h = _finish_layer(conv2d(_pad_hw(h, li.pad), w,
                                              li.spec.stride), li)
                 total += step.est_latency_s
-        return total, dict(ops)
+        return total, dict(ops), np.asarray(h)
 
 
 def executed_mean(plan, convs, x, params, n_workers, seeds=(0, 1000, 2000)
@@ -103,9 +112,46 @@ def executed_mean(plan, convs, x, params, n_workers, seeds=(0, 1000, 2000)
     not ride a single lucky sample."""
     lats, ops = [], None
     for s in seeds:
-        lat, ops = executed_latency(plan, convs, x, params, n_workers, s)
+        lat, ops, _ = executed_latency(plan, convs, x, params, n_workers, s)
         lats.append(lat)
     return float(np.mean(lats)), ops
+
+
+def stream_compare(plan: NetPlan, convs, x, params, n_workers: int,
+                   seeds=(0, 1000, 2000)) -> dict:
+    """Streamed vs unstreamed execution of the SAME segment plan, per delay
+    seed.  Per-seed the comparison is exact: the rng world is shared, every
+    sub-stage draw identical, and the pipelined chunk timeline is
+    componentwise <= the serial stage sum, so the k-th-arrival completion
+    cannot grow — the acceptance asserts it per seed, plus bit-identical
+    decoded outputs."""
+    rows, identical, close = [], True, True
+    for s in seeds:
+        lat_u, _, h_u = executed_latency(plan, convs, x, params, n_workers, s)
+        lat_s, _, h_s = executed_latency(plan, convs, x, params, n_workers, s,
+                                         streamed=True)
+        rows.append({"seed": s, "unstreamed_s": lat_u, "streamed_s": lat_s})
+        identical = identical and bool(np.array_equal(h_u, h_s))
+        # chunked piece times can reorder the k-th arrival, so a linear-mix
+        # scheme may decode from a DIFFERENT subset: mathematically equal,
+        # numerically a different decode matrix.  Selection schemes pick
+        # exact copies, so they must stay bitwise identical regardless;
+        # same-subset chunked decode is bitwise (tests/test_stream_exec.py).
+        scale = float(np.max(np.abs(h_u))) or 1.0
+        close = close and bool(np.max(np.abs(h_u - h_s)) <= 1e-2 * scale)
+    mean_u = float(np.mean([r["unstreamed_s"] for r in rows]))
+    mean_s = float(np.mean([r["streamed_s"] for r in rows]))
+    return {
+        "chunks": [s.chunks for s in plan.segments],
+        "per_seed": rows,
+        "unstreamed_mean_s": mean_u,
+        "streamed_mean_s": mean_s,
+        "reduction": 1.0 - mean_s / mean_u if mean_u else 0.0,
+        "never_worse": all(r["streamed_s"] <= r["unstreamed_s"] + 1e-12
+                           for r in rows),
+        "outputs_identical": identical,
+        "outputs_close": close,
+    }
 
 
 def _arm_stats(plan: NetPlan) -> dict:
@@ -169,6 +215,12 @@ def run(csv: Csv, quick: bool = False) -> dict:
         for scheme in SCHEMES:
             entry[scheme] = compare(layers, convs, x, params, N_WORKERS,
                                     scheme, execute)
+            if execute and name == "small_cnn@32":
+                # streamed scatter/gather on the segment plan (§11): same
+                # rng world, pipelined chunk timelines, identical outputs
+                seg_plan = compile_plan(layers, N_WORKERS, params, scheme)
+                entry[scheme]["streaming"] = stream_compare(
+                    seg_plan, convs, x, params, N_WORKERS)
         out["networks"][name] = entry
 
     # acceptance: the segment compiler never loses, and the fused
@@ -184,6 +236,33 @@ def run(csv: Csv, quick: bool = False) -> dict:
             out["networks"]["small_cnn@32"]["replication"]["model_reduction"]
             >= 0.0),
     }
+    # streamed scatter/gather (§11): per-seed exact — same rng world,
+    # pipelined chunk timeline <= serial stage sum — and bit-identical
+    small = out["networks"]["small_cnn@32"]
+    out["acceptance"].update({
+        "streamed_never_worse": all(
+            small[s]["streaming"]["never_worse"] for s in SCHEMES),
+        # selection schemes decode exact copies: bitwise, whatever subset
+        # wins the k-th arrival; linear mixes may decode from a different
+        # subset under chunked timing, so they pin closeness instead
+        "streamed_outputs_identical": all(
+            small[s]["streaming"]["outputs_identical"]
+            for s in ("replication", "uncoded")),
+        "streamed_outputs_close": all(
+            small[s]["streaming"]["outputs_close"] for s in SCHEMES),
+        "streamed_reduction_replication":
+            small["replication"]["streaming"]["reduction"],
+    })
+    csv.add("pipeline_streamed_reduction_replication",
+            small["replication"]["streaming"]["reduction"] * 100.0,
+            "percent virtual latency saved by streamed scatter/gather "
+            "(small_cnn@32, replication)")
+    for scheme in SCHEMES:
+        st = small[scheme]["streaming"]
+        print(f"small_cnn@32 {scheme} streamed: "
+              f"{st['unstreamed_mean_s']:.4f}s -> {st['streamed_mean_s']:.4f}s "
+              f"({st['reduction']:+.1%}, chunks={st['chunks']}, "
+              f"identical={st['outputs_identical']})")
     for scheme in ("replication", "uncoded"):
         csv.add(f"pipeline_{scheme}_executed_reduction",
                 feat[scheme]["executed_reduction"] * 100.0,

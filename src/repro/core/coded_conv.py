@@ -39,13 +39,14 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..kernels.ops import shard_map_compat
-from .schemes import (CodingScheme, commutes_elementwise, resolve_subset,
-                      source_of_piece)
+from .schemes import (CodingScheme, chunk_bounds, commutes_elementwise,
+                      decode_blocks, resolve_subset, source_of_piece)
 from .splitting import (ChainPlan, ConvSpec, SegmentSplitPlan, SplitPlan,
                         plan_segment_split, plan_width_split)
 
 __all__ = [
     "conv2d",
+    "conv2d_chunked",
     "split_input",
     "coded_conv2d",
     "coded_conv2d_sharded",
@@ -103,6 +104,24 @@ def conv2d(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
         x, w, window_strides=(stride, stride), padding="VALID",
         dimension_numbers=("NCHW", "OIHW", "NCHW"),
     )
+
+
+def conv2d_chunked(x: jax.Array, w: jax.Array, stride: int = 1,
+                   chunks: int = 1) -> jax.Array:
+    """VALID conv computed in ``chunks`` output-column blocks (streamed
+    scatter, DESIGN.md §11): block [a, b) consumes input columns
+    [a*stride, (b-1)*stride + K_W), so compute on the first shipped entry
+    chunk starts while the rest is still in flight.  Output columns are the
+    same reductions over the same values as the one-shot conv — the result
+    is identical; only the evaluation order is tiled."""
+    k_w = w.shape[-1]
+    w_out = (x.shape[-1] - k_w) // stride + 1
+    c = max(1, min(int(chunks), int(w_out)))
+    if c <= 1:
+        return conv2d(x, w, stride)
+    outs = [conv2d(x[..., a * stride:(b - 1) * stride + k_w], w, stride)
+            for a, b in chunk_bounds(w_out, c)]
+    return jnp.concatenate(outs, axis=-1)
 
 
 def split_input(x: jax.Array, plan: SplitPlan) -> jax.Array:
@@ -180,12 +199,16 @@ def coded_conv2d(
 
 def _chain(xp: jax.Array, cp: ChainPlan, weights: Sequence[jax.Array],
            specs: Sequence[ConvSpec], pads: Sequence[int],
-           acts: Sequence[str | None], apply_acts: bool) -> jax.Array:
+           acts: Sequence[str | None], apply_acts: bool,
+           entry_chunks: int = 1) -> jax.Array:
     """Run one partition's self-contained conv chain on its (coded or true)
     entry slice.  Interior boundaries re-apply the activation (when
     ``apply_acts``) and inject the re-pad: full zero rows on H, and on W
     only the per-partition edge shortfall (``ChainStep.lz``/``rz``) — the
-    interior halo columns are real data already resident in the slice."""
+    interior halo columns are real data already resident in the slice.
+    ``entry_chunks > 1`` tiles layer 0's conv over output-column blocks
+    (streamed entry: compute starts on the first shipped chunk) — identical
+    values, tiled evaluation order."""
     for j, (w, sp) in enumerate(zip(weights, specs)):
         if j > 0:
             st = cp.steps[j]
@@ -194,7 +217,9 @@ def _chain(xp: jax.Array, cp: ChainPlan, weights: Sequence[jax.Array],
             p = int(pads[j])
             if p or st.lz or st.rz:
                 xp = jnp.pad(xp, ((0, 0), (0, 0), (p, p), (st.lz, st.rz)))
-        xp = conv2d(xp, w, sp.stride)
+            xp = conv2d(xp, w, sp.stride)
+        else:
+            xp = conv2d_chunked(xp, w, sp.stride, entry_chunks)
     return xp
 
 
@@ -209,9 +234,19 @@ def run_segment(
     subset: Sequence[int] | None = None,
     executor=None,
     assignment: Sequence[int] | None = None,
+    stream_chunks: int | None = None,
 ) -> jax.Array:
     """Execute a coded *segment*: encode once, per-piece conv chains, decode
     once (core/netplan.py's execution form).
+
+    ``stream_chunks`` (``SegmentStep.chunks`` from the plan compiler)
+    streams the scatter/gather in that many column chunks: layer-0 compute
+    is tiled per shipped entry chunk and the exit decode runs incrementally
+    per column block at the k-th arrival (``schemes.decode_blocks`` — the
+    decode-matrix solve is shared, only the skinny GEMM is chunked).  The
+    decoded output is identical to the unstreamed run; the virtual-time win
+    comes from the delay model's pipelined chunk timeline
+    (``dist.SegmentDelay(chunks=...)``).
 
     ``x`` is the segment's pre-padded entry input (the caller applies layer
     0's pad, exactly as ``coded_conv2d`` expects).  ``acts[j]`` names the
@@ -263,10 +298,11 @@ def run_segment(
         piece_part = [split.parts[0]] * scheme.n
         piece_in = [coded_in[i] for i in range(scheme.n)]
     _count_op("encode")
+    chunks = max(1, int(stream_chunks)) if stream_chunks else 1
 
     def _piece(i: int) -> jax.Array:
         return _chain(piece_in[i], piece_part[i], weights, specs, pads, acts,
-                      apply_acts=commuting)
+                      apply_acts=commuting, entry_chunks=chunks)
 
     if executor is not None:
         if hasattr(executor, "ensure_armed"):
@@ -279,13 +315,12 @@ def run_segment(
                                                       split))
         y_parts = executor.run(
             scheme, [lambda i=i: _piece(i) for i in range(scheme.n)],
-            assignment=assignment,
+            assignment=assignment, decode_chunks=chunks,
         )  # (k, B, C_O, H_O, W_O^p)
     else:
         subset = resolve_subset(scheme, subset)
         outs = jnp.stack([_piece(i) for i in subset])
-        decoded = scheme.decode_from(subset, outs.reshape(len(subset), -1))
-        y_parts = decoded.reshape((scheme.k,) + outs.shape[1:])
+        y_parts = decode_blocks(scheme, subset, outs, chunks=chunks)
     _count_op("decode")
 
     y = jnp.concatenate(list(y_parts), axis=-1)

@@ -30,6 +30,8 @@ __all__ = [
     "phase_sizes",
     "harmonic",
     "exp_order_stat_mean",
+    "pipelined_time",
+    "stream_chunk_count",
 ]
 
 
@@ -38,6 +40,53 @@ def harmonic(n: int) -> float:
     if n <= 0:
         return 0.0
     return float(np.sum(1.0 / np.arange(1, n + 1)))
+
+
+def pipelined_time(stages, chunks: int) -> float:
+    """Virtual duration of a stage chain executed in ``chunks`` column chunks.
+
+    A piece's round trip is a chain of resource stages (receive, per-layer
+    compute, send) that serial execution pays as their SUM.  Streaming the
+    piece in C equal column chunks pipelines the stages: chunk j's compute
+    overlaps chunk j+1's ship, so the chain behaves like a C-deep pipeline
+    whose makespan is
+
+        T(C) = sum(stages)/C  +  (C-1) * max(stages)/C
+
+    — the first chunk fills the pipeline (one serial pass at 1/C width),
+    then every further chunk costs only the bottleneck stage.  T(1) is the
+    serial sum; T(C) -> max(stages) as C grows, i.e. perfect ship/compute
+    overlap bounded by the slowest resource (DESIGN.md §11).
+    """
+    s = [float(x) for x in stages]
+    if not s:
+        return 0.0
+    total = sum(s)
+    c = max(int(chunks), 1)
+    if c == 1:
+        return total
+    return total / c + (c - 1) * max(s) / c
+
+
+def stream_chunk_count(stages, *, tol: float = 0.1, cap: int = 8) -> int:
+    """Smallest chunk count within ``tol`` of the pipeline's asymptote.
+
+    ``pipelined_time`` approaches max(stages) as C grows; chunking past
+    that point only adds per-chunk overhead.  The smallest C with
+    ``T(C) - max <= tol * max`` is ``ceil((sum - max) / (tol * max))`` —
+    large when transfer and compute are comparable (lots to overlap),
+    1 when one stage dominates (nothing to hide).  Capped at ``cap``.
+    """
+    import math
+
+    s = [float(x) for x in stages]
+    if not s:
+        return 1
+    total, mx = sum(s), max(s)
+    if mx <= 0.0 or total <= mx:
+        return 1
+    ideal = (total - mx) / (tol * mx)
+    return int(min(max(math.ceil(ideal), 1), max(cap, 1)))
 
 
 def exp_order_stat_mean(n: int, k: int, rate: float) -> float:

@@ -45,8 +45,18 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from .latency import PhaseSizes, SystemParams, harmonic
-from .schemes import CodingScheme, commutes_elementwise, get_scheme
+from .latency import (
+    PhaseSizes,
+    SystemParams,
+    harmonic,
+    stream_chunk_count,
+)
+from .schemes import (
+    CodingScheme,
+    commutes_elementwise,
+    get_scheme,
+    warm_decode_cache,
+)
 from .splitting import ConvSpec, SegmentSplitPlan, plan_segment_split
 
 __all__ = [
@@ -57,6 +67,7 @@ __all__ = [
     "order_factor",
     "segment_sizes",
     "segment_latency",
+    "plan_stream_chunks",
     "compile_plan",
 ]
 
@@ -97,6 +108,9 @@ class SegmentStep:
     entry_bytes: int        # master->worker scatter: all n dispatched pieces
     exit_bytes: int         # worker->master gather: the k consumed slices
     halo_extra_bytes: int   # source partitions' overlap vs disjoint coverage
+    # streamed-dispatch depth (DESIGN.md §11): ship/compute the segment in
+    # this many column chunks; 1 = serial scatter/compute/gather
+    chunks: int = 1
 
     @property
     def depth(self) -> int:
@@ -271,6 +285,34 @@ def segment_latency(specs: Sequence[ConvSpec], pads: Sequence[int],
     return float(enc_dec + max(worker_path, rem_mean))
 
 
+def plan_stream_chunks(specs: Sequence[ConvSpec], pads: Sequence[int],
+                       scheme: CodingScheme, params: SystemParams,
+                       split: SegmentSplitPlan | None = None, *,
+                       tol: float = 0.1, cap: int = 8) -> int:
+    """Streaming depth for one segment from the §IV transfer/compute ratio.
+
+    The mean durations of a piece's sub-stages (entry receive, one compute
+    per chain layer, exit send) under ``params`` feed
+    :func:`~repro.core.latency.stream_chunk_count`: when ship and compute
+    means are comparable there is real overlap to win and the count grows
+    toward ``cap``; when one resource dominates, streaming cannot hide
+    anything and the count collapses to 1.  Bounded by the partitions'
+    exit width so every chunk is at least one column.
+    """
+    if split is None:
+        split = plan_segment_split(specs, pads, scheme.k)
+    layer_sz = segment_layer_sizes(specs, pads, scheme, split)
+    stages: list[float] = []
+    for s in layer_sz:
+        if s.n_rec:
+            stages.append(params.rec.scaled(s.n_rec).mean())
+        stages.append(params.cmp.scaled(s.n_cmp).mean())
+        if s.n_sen:
+            stages.append(params.sen.scaled(s.n_sen).mean())
+    c = stream_chunk_count(stages, tol=tol, cap=cap)
+    return max(1, min(c, min(p.w_exit for p in split.parts)))
+
+
 # ---------------------------------------------------------------------------
 # scheme instantiation + per-segment k
 # ---------------------------------------------------------------------------
@@ -359,10 +401,13 @@ def _fusible(prev: LayerInfo, cur: LayerInfo, commuting: bool) -> bool:
 
 def _segment_step(layers: Sequence[LayerInfo], start: int, stop: int,
                   planned: tuple[CodingScheme, SegmentSplitPlan, float],
-                  ) -> SegmentStep:
+                  params: SystemParams) -> SegmentStep:
     from .schemes import source_of_piece
 
     scheme, split, lat = planned
+    specs = [li.spec for li in layers[start:stop]]
+    pads = [li.pad for li in layers[start:stop]]
+    chunks = plan_stream_chunks(specs, pads, scheme, params, split)
     seg = layers[start:stop]
     s0, sd = seg[0].spec, seg[-1].spec
     # scatter = the n pieces the master actually dispatches: selection
@@ -387,7 +432,8 @@ def _segment_step(layers: Sequence[LayerInfo], start: int, stop: int,
             * (sum(p.w_entry for p in split.parts) - coverage))
     return SegmentStep(start=start, stop=stop, scheme=scheme, split=split,
                        est_latency_s=lat, entry_bytes=int(entry),
-                       exit_bytes=int(exit_), halo_extra_bytes=int(halo))
+                       exit_bytes=int(exit_), halo_extra_bytes=int(halo),
+                       chunks=chunks)
 
 
 def _local_step(layers: Sequence[LayerInfo], start: int, stop: int,
@@ -431,8 +477,14 @@ def compile_plan(layers: Sequence[LayerInfo], n: int, params: SystemParams,
         steps.extend(_compile_run(layers, i, j, n, params, scheme,
                                   fixed_scheme, max_depth, dp))
         i = j
-    return NetPlan(layers=layers, steps=tuple(steps),
+    plan = NetPlan(layers=layers, steps=tuple(steps),
                    scheme_name=scheme, n=n)
+    # warm each segment scheme's decode matrices now, at compile time —
+    # the first inference's TTFT should pay the skinny decode GEMM only,
+    # never the Vandermonde / pseudo-inverse solve (DESIGN.md §11)
+    for seg in plan.segments:
+        warm_decode_cache(seg.scheme)
+    return plan
 
 
 def _compile_run(layers, lo: int, hi: int, n: int, params, scheme_name: str,
@@ -462,7 +514,8 @@ def _compile_run(layers, lo: int, hi: int, n: int, params, scheme_name: str,
             for b in range(min(span, a + depth_cap), a, -1):
                 c = cost(a, b)
                 if c is not None:
-                    out.append(_segment_step(layers, lo + a, lo + b, c))
+                    out.append(_segment_step(layers, lo + a, lo + b, c,
+                                             params))
                     a = b
                     break
             else:
@@ -499,7 +552,8 @@ def _compile_run(layers, lo: int, hi: int, n: int, params, scheme_name: str,
             a = -a - 1
             out.append(_local_step(layers, lo + a, lo + b, params))
         else:
-            out.append(_segment_step(layers, lo + a, lo + b, cost(a, b)))
+            out.append(_segment_step(layers, lo + a, lo + b, cost(a, b),
+                                     params))
         b = a
     out.reverse()
     return out

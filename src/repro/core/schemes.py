@@ -52,6 +52,9 @@ __all__ = [
     "resolve_subset",
     "commutes_elementwise",
     "source_of_piece",
+    "chunk_bounds",
+    "decode_blocks",
+    "warm_decode_cache",
     "SimScenario",
     "SimPlan",
     "SimBatch",
@@ -191,6 +194,93 @@ def resolve_subset(code: CodingScheme, subset: Sequence[int] | None) -> list[int
     if not code.decodable(subset):
         raise ValueError(f"subset {subset} is not decodable under {code}")
     return subset
+
+
+def chunk_bounds(width: int, chunks: int) -> list[tuple[int, int]]:
+    """Split ``width`` columns into up to ``chunks`` contiguous [a, b)
+    blocks, as evenly as possible (earlier blocks take the remainder).
+    The one chunking rule shared by streamed compute, streamed decode, and
+    the delay models, so their block boundaries always agree."""
+    c = max(1, min(int(chunks), int(width)))
+    base, extra = divmod(int(width), c)
+    out, a = [], 0
+    for i in range(c):
+        b = a + base + (1 if i < extra else 0)
+        out.append((a, b))
+        a = b
+    return out
+
+
+def decode_blocks(scheme: CodingScheme, subset: Sequence[int], stacked,
+                  chunks: int = 1):
+    """Decode stacked coded pieces ``(m,) + piece_shape`` into sources
+    ``(k,) + piece_shape`` — optionally incrementally, per column block
+    along the last axis (streamed gather, DESIGN.md §11).
+
+    Chunking only tiles the skinny decode GEMM over column blocks; the
+    decode matrix itself (Vandermonde inverse / LT pseudo-inverse) is
+    solved once and shared via the scheme's lru caches, and each output
+    element is still the same length-m reduction over the same coded
+    values, so the result is identical to the one-shot decode.
+    """
+    import jax.numpy as jnp
+
+    subset = [int(i) for i in subset]
+    m = stacked.shape[0]
+    piece_shape = stacked.shape[1:]
+    width = int(piece_shape[-1]) if piece_shape else 1
+    c = max(1, min(int(chunks), width))
+    if c <= 1 or not piece_shape:
+        decoded = scheme.decode_from(subset, stacked.reshape(m, -1))
+        return decoded.reshape((scheme.k,) + piece_shape)
+    parts = []
+    for a, b in chunk_bounds(width, c):
+        blk = stacked[..., a:b]
+        dec = scheme.decode_from(subset, blk.reshape(m, -1))
+        parts.append(dec.reshape((scheme.k,) + blk.shape[1:]))
+    return jnp.concatenate(parts, axis=-1)
+
+
+def warm_decode_cache(scheme: CodingScheme, limit: int = 64) -> int:
+    """Precompute the decode matrices ``scheme`` may consume at run time.
+
+    The first decode of a cold process otherwise pays the Vandermonde
+    inverse (MDS) or rank-test + pseudo-inverse (LT) inside a request's
+    TTFT; plan compile time and Engine startup call this so the k-th
+    arrival only ever pays the skinny GEMM.  Subsets are warmed in
+    lexicographic order up to ``limit`` (C(n, k) can explode); selection
+    schemes (replication / uncoded) decode by gather and need no warming.
+    Returns the number of matrices materialized.
+    """
+    import itertools
+
+    n, k = scheme.n, scheme.k
+    warmed = 0
+    if hasattr(scheme, "decode_matrix"):  # MDS-structured
+        for sub in itertools.combinations(range(n), k):
+            if warmed >= limit:
+                break
+            scheme.decode_matrix(list(sub))
+            warmed += 1
+        return warmed
+    if isinstance(scheme, LTScheme):
+        # the canonical prefix first (what SPMD paths consume) ...
+        subs = [tuple(scheme.default_subset())]
+        # ... then k-subsets in lexicographic order; non-decodable ones
+        # (rank < k) are skipped — they can never be consumed
+        subs.extend(itertools.combinations(range(n), k))
+        seen = set()
+        for sub in subs:
+            if warmed >= limit:
+                break
+            if sub in seen:
+                continue
+            seen.add(sub)
+            if not scheme.decodable(list(sub)):
+                continue
+            _lt_decode_matrix(n, k, scheme.seed, scheme.c, scheme.delta, sub)
+            warmed += 1
+    return warmed
 
 
 def _masked_rowmax(a: np.ndarray, mask: np.ndarray) -> np.ndarray:
@@ -529,6 +619,19 @@ def _lt_rows(n: int, k: int, seed: int, c: float, delta: float) -> np.ndarray:
     return rows
 
 
+@functools.lru_cache(maxsize=1024)
+def _lt_decode_matrix(n: int, k: int, seed: int, c: float, delta: float,
+                      subset: tuple) -> np.ndarray:
+    """(k, m) least-squares decode matrix (pseudo-inverse of the received
+    rows) for one LT subset — cached so streamed per-block decodes and
+    repeat arrivals share a single solve, mirroring
+    ``coding.decode_matrix_cached`` for MDS."""
+    rows = _lt_rows(n, k, seed, c, delta)[np.asarray(subset)]
+    D = np.linalg.pinv(rows)
+    D.setflags(write=False)
+    return D
+
+
 @functools.lru_cache(maxsize=256)
 def _lt_default_subset(n: int, k: int, seed: int, c: float,
                        delta: float) -> tuple:
@@ -598,9 +701,18 @@ class LTScheme:
         return mds_encode(E, sources)
 
     def decode_from(self, subset: Sequence[int], coded):
-        """Least-squares solve over the received rows (m >= k allowed)."""
-        rows = self.rows[np.asarray([int(i) for i in subset])]
-        return LTCode.decode_from(rows, coded)
+        """Least-squares decode over the received rows (m >= k allowed) —
+        applied as a cached pseudo-inverse through the same skinny-GEMM
+        kernel as MDS, so the per-subset solve is paid once (warmable at
+        startup) instead of per call as the seed's ``lstsq`` was."""
+        import jax.numpy as jnp
+
+        from ..kernels.ops import mds_decode
+
+        sub = tuple(int(i) for i in subset)
+        D = _lt_decode_matrix(self.n, self.k, self.seed, self.c, self.delta,
+                              sub)
+        return mds_decode(jnp.asarray(D, dtype=coded.dtype), coded)
 
     def encode_flops(self, row_elems: int) -> int:
         return int(2 * self.rows.sum() * row_elems)  # XOR-sums of d sources

@@ -8,8 +8,14 @@ on injected failures.  ``FakeClock`` + ``DeterministicDelay`` make every
 k-of-n saving measurable.
 """
 from .adaptive import AdaptiveExecutor, AdaptivePlan, AdaptivePlanner, gemm_spec
-from .clock import Clock, FakeClock, RealClock
-from .executor import CodedExecutor, decodable_prefix
+from .clock import (
+    Clock,
+    FakeClock,
+    RealClock,
+    pipelined_time,
+    stream_chunk_count,
+)
+from .executor import CodedExecutor, ExecHandle, decodable_prefix
 from .faults import (
     DelayModel,
     DeterministicDelay,
@@ -19,7 +25,7 @@ from .faults import (
     StragglerDrift,
     per_layer_sizes,
 )
-from .pool import Arrival, Piece, PieceTiming, RunReport, WorkerPool
+from .pool import Arrival, Piece, PieceTiming, RunHandle, RunReport, WorkerPool
 
 __all__ = [
     "AdaptiveExecutor",
@@ -29,7 +35,10 @@ __all__ = [
     "Clock",
     "FakeClock",
     "RealClock",
+    "pipelined_time",
+    "stream_chunk_count",
     "CodedExecutor",
+    "ExecHandle",
     "decodable_prefix",
     "DelayModel",
     "DeterministicDelay",
@@ -41,6 +50,7 @@ __all__ = [
     "Arrival",
     "Piece",
     "PieceTiming",
+    "RunHandle",
     "RunReport",
     "WorkerPool",
 ]

@@ -21,7 +21,13 @@ import threading
 import time
 from typing import Protocol, runtime_checkable
 
-__all__ = ["Clock", "RealClock", "FakeClock"]
+# the pipelined-chunk timeline math lives with the rest of the latency
+# model (core/latency.py); re-exported here because the pool's time
+# bookkeeping is where execution consumes it
+from ..core.latency import pipelined_time, stream_chunk_count
+
+__all__ = ["Clock", "RealClock", "FakeClock", "pipelined_time",
+           "stream_chunk_count"]
 
 
 @runtime_checkable

@@ -12,21 +12,27 @@ Heterogeneous workers (``core/hetero.py``): pass ``speeds=`` (or a
 precomputed ``assignment=`` of per-worker piece counts from
 ``allocate_pieces``) and fast workers receive proportionally more coded
 pieces, each executed back-to-back on its worker's serial timeline.
+
+Overlapped runs (DESIGN.md §11): ``run_async`` dispatches a run and
+returns an :class:`ExecHandle` immediately, so independent runs — a step's
+prefill length-buckets against its decode, or the next segment's dispatch
+against the current one's tail — interleave on the same pool.  Dependent
+runs chain instead: inside ``with ex.chain():`` each run is gated to start
+at the previous run's ``t_complete`` on the group timeline.
 """
 from __future__ import annotations
 
-import dataclasses
+import contextlib
 from typing import Any, Callable, Sequence
 
 import jax.numpy as jnp
-import numpy as np
 
-from ..core.schemes import CodingScheme
+from ..core.schemes import CodingScheme, decode_blocks
 from .clock import Clock
 from .faults import DelayModel, FaultPlan
-from .pool import RunReport, WorkerPool
+from .pool import RunHandle, RunReport, WorkerPool
 
-__all__ = ["CodedExecutor", "decodable_prefix"]
+__all__ = ["CodedExecutor", "ExecHandle", "decodable_prefix"]
 
 
 def decodable_prefix(scheme: CodingScheme, order: Sequence[int]) -> list[int] | None:
@@ -44,6 +50,45 @@ def decodable_prefix(scheme: CodingScheme, order: Sequence[int]) -> list[int] | 
         if scheme.decodable(prefix):
             return prefix
     return None  # unreachable: the full order was decodable
+
+
+class ExecHandle:
+    """One in-flight coded run; ``result()`` collects, decodes, and books
+    the run into the executor's telemetry (last_report / run_count /
+    on_report / chain gate) — in *resolution* order, which for overlapped
+    runs is the caller's join order."""
+
+    def __init__(self, ex: "CodedExecutor", scheme: CodingScheme,
+                 handle: RunHandle, decode_chunks: int):
+        self._ex = ex
+        self._scheme = scheme
+        self._handle = handle
+        self._decode_chunks = decode_chunks
+        self._out: jnp.ndarray | None = None
+
+    @property
+    def report(self) -> RunReport:
+        return self._handle.report
+
+    def cancel(self) -> None:
+        self._handle.cancel()
+
+    def result(self) -> jnp.ndarray:
+        if self._out is not None:
+            return self._out
+        results, report = self._handle.result()
+        ex, scheme = self._ex, self._scheme
+        ex.last_report = report
+        ex.run_count += 1
+        if ex._chain_t is not None:
+            ex._chain_t = max(ex._chain_t, report.t_complete)
+        if ex.on_report is not None:
+            ex.on_report(report)
+        subset = report.subset
+        stacked = jnp.stack([jnp.asarray(results[i]) for i in subset])
+        self._out = decode_blocks(scheme, subset, stacked,
+                                  chunks=self._decode_chunks)
+        return self._out
 
 
 class CodedExecutor:
@@ -78,6 +123,8 @@ class CodedExecutor:
         # serving scheduler hooks this to credit every run's (virtual)
         # completion time and dispatch cost to the step that issued it.
         self.on_report: Callable[[RunReport], None] | None = None
+        # virtual gate for the next chained run (None = chaining off)
+        self._chain_t: float | None = None
 
     def close(self) -> None:
         self.pool.close()
@@ -88,6 +135,20 @@ class CodedExecutor:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    @contextlib.contextmanager
+    def chain(self, start: float = 0.0):
+        """Gate the runs issued inside the block into a dependency chain:
+        each run starts (in group-relative virtual time) no earlier than
+        the previous chained run's ``t_complete`` — how the scheduler
+        models a lane's serial GEMM sequence while *other* chains overlap
+        it on the same ``pool.group()`` timeline.  Not reentrant."""
+        prev = self._chain_t
+        self._chain_t = float(start)
+        try:
+            yield self
+        finally:
+            self._chain_t = prev
+
     def ensure_armed(self, sizes) -> None:
         """Telemetry hook: declare the next run's work content (one
         ``PhaseSizes`` — or a per-layer sequence for segment chains)
@@ -96,7 +157,7 @@ class CodedExecutor:
         execution layers call it unconditionally so segment runs train
         the estimator without caring which executor they were handed."""
 
-    def run(
+    def run_async(
         self,
         scheme: CodingScheme,
         piece_fns: Sequence[Callable[[], Any]],
@@ -106,20 +167,16 @@ class CodedExecutor:
         fault_plan: FaultPlan | None = None,
         delay_model: DelayModel | None = None,
         gather_all: bool = False,
-    ) -> jnp.ndarray:
-        """Execute the n coded pieces, decode at the k-th arrival.
+        decode_chunks: int = 1,
+        start_at: float | None = None,
+    ) -> ExecHandle:
+        """Dispatch the n coded pieces now; decode on ``handle.result()``.
 
-        ``piece_fns[i]`` computes coded piece i (all outputs same shape).
-        Returns the decoded sources with shape ``(scheme.k,) + piece_shape``;
-        the run's :class:`RunReport` lands in ``last_report``.
-
-        ``gather_all`` turns the run into a *probe*: the master waits for
-        every piece before decoding (still from the smallest decodable
-        prefix, so the result is identical), trading one run's early-exit
-        saving for telemetry on every worker — with k-of-n cancellation a
-        straggler never completes, so a completions-only estimator would
-        otherwise keep believing whatever it last saw (survivorship bias;
-        see dist/adaptive.py).
+        ``start_at`` gates the run's pieces to a group-relative virtual
+        time (default: the active :meth:`chain` position, else 0).
+        ``decode_chunks > 1`` decodes the accepted subset incrementally per
+        column block (streamed gather — the decode-matrix solve is shared,
+        only the skinny GEMM is chunked; bit-identical output).
         """
         if len(piece_fns) != scheme.n:
             raise ValueError(
@@ -136,7 +193,9 @@ class CodedExecutor:
                      if len(order) >= n_pieces else None)
         else:
             until = lambda order: decodable_prefix(scheme, order)
-        results, report = self.pool.run(
+        if start_at is None:
+            start_at = self._chain_t if self._chain_t is not None else 0.0
+        handle = self.pool.run_async(
             piece_fns,
             until,
             assignment=assignment,
@@ -146,14 +205,37 @@ class CodedExecutor:
             # set cannot decode (runtime.py's "ignored if enough redundancy
             # remains" semantics)
             viable=lambda ids: scheme.decodable(ids),
+            start_at=start_at,
         )
-        self.last_report = report
-        self.run_count += 1
-        if self.on_report is not None:
-            self.on_report(report)
-        subset = report.subset
-        stacked = jnp.stack([jnp.asarray(results[i]) for i in subset])
-        piece_shape = stacked.shape[1:]
-        flat = stacked.reshape(len(subset), -1)
-        decoded = scheme.decode_from(subset, flat)
-        return decoded.reshape((scheme.k,) + piece_shape)
+        return ExecHandle(self, scheme, handle, int(decode_chunks))
+
+    def run(
+        self,
+        scheme: CodingScheme,
+        piece_fns: Sequence[Callable[[], Any]],
+        *,
+        assignment: Sequence[int] | None = None,
+        speeds: Sequence[float] | None = None,
+        fault_plan: FaultPlan | None = None,
+        delay_model: DelayModel | None = None,
+        gather_all: bool = False,
+        decode_chunks: int = 1,
+    ) -> jnp.ndarray:
+        """Execute the n coded pieces, decode at the k-th arrival.
+
+        ``piece_fns[i]`` computes coded piece i (all outputs same shape).
+        Returns the decoded sources with shape ``(scheme.k,) + piece_shape``;
+        the run's :class:`RunReport` lands in ``last_report``.
+
+        ``gather_all`` turns the run into a *probe*: the master waits for
+        every piece before decoding (still from the smallest decodable
+        prefix, so the result is identical), trading one run's early-exit
+        saving for telemetry on every worker — with k-of-n cancellation a
+        straggler never completes, so a completions-only estimator would
+        otherwise keep believing whatever it last saw (survivorship bias;
+        see dist/adaptive.py).
+        """
+        return self.run_async(
+            scheme, piece_fns, assignment=assignment, speeds=speeds,
+            fault_plan=fault_plan, delay_model=delay_model,
+            gather_all=gather_all, decode_chunks=decode_chunks).result()

@@ -31,6 +31,7 @@ from typing import Mapping, Protocol, Sequence, runtime_checkable
 import numpy as np
 
 from ..core.latency import PhaseSizes, SystemParams
+from .clock import pipelined_time
 
 __all__ = [
     "FaultPlan",
@@ -126,27 +127,61 @@ class SegmentDelay:
     the pool can record them into ``PieceTiming.stages`` — the per-layer
     telemetry PR 3's estimator consumes.  Deterministic in
     (seed, worker, piece), like every DelayModel.
+
+    ``chunks > 1`` models streamed dispatch (DESIGN.md §11): the piece's
+    entry/exit columns ship in ``chunks`` column chunks so receive,
+    per-layer compute, and send pipeline instead of serializing —
+    ``piece_time`` becomes :func:`~repro.dist.clock.pipelined_time` over
+    the chain's *sub*-stages (one receive, one compute per layer, one
+    send).  ``stage_times`` still reports the raw serial per-layer lumps
+    (the estimator's feed, and the scheduler's overlap evidence: the gap
+    ``sum(stages) - t_compute`` is exactly the shipped-under-compute
+    time).  ``chunks == 1`` is bitwise-identical to the serial model —
+    same rng, same sampling order.
     """
 
     params: SystemParams
     layer_sizes: tuple  # tuple[PhaseSizes, ...]
     seed: int = 0
+    chunks: int = 1
 
-    def stage_times(self, worker: int, piece: int) -> tuple:
+    def _substage_times(self, worker: int, piece: int) -> tuple:
+        """Flat (rec?, cmp, ..., cmp, sen?) sub-stage durations, sampled in
+        the exact order the serial model samples them."""
         rng = np.random.default_rng((self.seed, worker, piece))
         out = []
         for s in self.layer_sizes:
+            if s.n_rec:
+                out.append(("rec", float(
+                    self.params.rec.scaled(s.n_rec).sample(rng))))
+            out.append(("cmp", float(
+                self.params.cmp.scaled(s.n_cmp).sample(rng))))
+            if s.n_sen:
+                out.append(("sen", float(
+                    self.params.sen.scaled(s.n_sen).sample(rng))))
+        return tuple(out)
+
+    def stage_times(self, worker: int, piece: int) -> tuple:
+        out, j = [], 0
+        subs = self._substage_times(worker, piece)
+        for s in self.layer_sizes:
             t = 0.0
             if s.n_rec:
-                t += self.params.rec.scaled(s.n_rec).sample(rng)
-            t += self.params.cmp.scaled(s.n_cmp).sample(rng)
+                t += subs[j][1]
+                j += 1
+            t += subs[j][1]
+            j += 1
             if s.n_sen:
-                t += self.params.sen.scaled(s.n_sen).sample(rng)
+                t += subs[j][1]
+                j += 1
             out.append(float(t))
         return tuple(out)
 
     def piece_time(self, worker: int, piece: int) -> float:
-        return float(sum(self.stage_times(worker, piece)))
+        subs = [t for _, t in self._substage_times(worker, piece)]
+        if self.chunks <= 1:
+            return float(sum(subs))
+        return float(pipelined_time(subs, self.chunks))
 
 
 def per_layer_sizes(seg_sizes: Sequence[PhaseSizes]) -> tuple:
@@ -172,15 +207,27 @@ class ShiftExpDelay:
     worker re-samples identically, and thread interleaving cannot perturb
     a run.  (Approximation vs ``hetero.simulate_hetero``: the input
     transmission is charged per piece, not once per worker.)
+
+    ``chunks > 1`` pipelines the three phases as streamed column chunks
+    (see :class:`SegmentDelay`): ``piece_time`` becomes
+    ``pipelined_time((rec, cmp, sen), chunks)`` while ``stage_times``
+    keeps reporting the raw serial phases so the overlap stays measurable.
     """
 
     params: SystemParams
     sizes: PhaseSizes
     seed: int = 0
+    chunks: int = 1
+
+    def stage_times(self, worker: int, piece: int) -> tuple:
+        rng = np.random.default_rng((self.seed, worker, piece))
+        rec = float(self.params.rec.scaled(self.sizes.n_rec).sample(rng))
+        cmp = float(self.params.cmp.scaled(self.sizes.n_cmp).sample(rng))
+        sen = float(self.params.sen.scaled(self.sizes.n_sen).sample(rng))
+        return (rec, cmp, sen)
 
     def piece_time(self, worker: int, piece: int) -> float:
-        rng = np.random.default_rng((self.seed, worker, piece))
-        t = self.params.rec.scaled(self.sizes.n_rec).sample(rng)
-        t += self.params.cmp.scaled(self.sizes.n_cmp).sample(rng)
-        t += self.params.sen.scaled(self.sizes.n_sen).sample(rng)
-        return float(t)
+        stages = self.stage_times(worker, piece)
+        if self.chunks <= 1:
+            return float(sum(stages))
+        return float(pipelined_time(stages, self.chunks))

@@ -28,9 +28,25 @@ to reach the queue — so FakeClock runs are bit-deterministic even when a
 failure forces re-dispatch across several live workers.  Re-dispatched
 pieces carry ``not_before = t_detect``, so completion times remain
 causally consistent.
+
+Concurrent runs (DESIGN.md §11): ``run_async`` submits a run and returns a
+:class:`RunHandle` immediately; several in-flight runs interleave on the
+same workers.  Runs submitted inside one ``pool.group()`` share a single
+virtual timeline (per-worker ``t_free`` persists across them), which is
+how the serving scheduler models a step's prefill and decode dispatches
+*contending* for the same devices instead of pretending each run gets an
+idle pool.  Outside a group every run starts a fresh timeline, so
+``run()`` — which is just ``run_async(...).result()`` — behaves exactly
+as the historical serial API.  In virtual mode a worker processes every
+piece queued to it even after its run is cancelled: whether a cancel
+lands before a dequeue is a wall-clock race, and skipping would fork the
+shared group timeline on it.  Real-clock runs keep the skip (a cancelled
+run's undispatched pieces are dropped) because there wall order *is* the
+semantics.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import heapq
 import queue
@@ -41,7 +57,8 @@ from typing import Any, Callable, Sequence
 from .clock import Clock, FakeClock, RealClock
 from .faults import DelayModel, FaultPlan
 
-__all__ = ["Piece", "Arrival", "PieceTiming", "RunReport", "WorkerPool"]
+__all__ = ["Piece", "Arrival", "PieceTiming", "RunReport", "RunHandle",
+           "WorkerPool"]
 
 _STOP = object()
 _MIN_DUR = 1e-9  # keeps per-worker virtual timelines strictly increasing
@@ -72,6 +89,8 @@ class PieceTiming:
     modeled service duration (the full rec+cmp+sen round-trip in delay-model
     mode, the measured compute time in measured mode), and
     ``t_arrival = t_dispatch + t_compute`` its completion at the master.
+    Queueing behind other runs in a group widens ``t_dispatch`` only —
+    ``t_compute`` is pure service time, never contention.
     """
 
     worker: int
@@ -80,9 +99,10 @@ class PieceTiming:
     t_compute: float
     t_arrival: float
     # per-layer stage durations of a multi-layer (segment) piece, when the
-    # delay model exposes them (faults.SegmentDelay) — summing to
-    # t_compute up to the slowdown-scaled clamp.  Empty for single-layer
-    # pieces and measured mode.
+    # delay model exposes them (faults.SegmentDelay) — raw *serial* stage
+    # durations, so with streamed chunking (delay.chunks > 1) they sum to
+    # MORE than the pipelined t_compute; the gap is the overlapped
+    # ship/compute time.  Empty for measured mode.
     stages: tuple = ()
 
 
@@ -99,6 +119,9 @@ class RunReport:
     cancelled: list[int]              # piece ids dispatched but never consumed
     assignment: dict[int, int]        # piece id -> worker that produced it
     timings: list[PieceTiming] = dataclasses.field(default_factory=list)
+    # virtual time the run was gated to start at (chained runs inherit the
+    # previous run's t_complete) — t_complete - t_submit is the run's span
+    t_submit: float = 0.0
 
 
 @dataclasses.dataclass
@@ -106,12 +129,14 @@ class _RunCtx:
     """Per-run shared state handed to worker threads with each piece."""
 
     epoch: int
+    group: int
     cancel: threading.Event
     faults: FaultPlan
     delay: DelayModel | None
     clock: Clock
     time_scale: float
-    t0_wall: float
+    t0_wall: float   # wall origin of the run's GROUP (shared across a group)
+    start_at: float  # virtual gate: no piece of this run starts earlier
     post: Callable[["_Event"], None]
 
 
@@ -155,13 +180,67 @@ class _MasterState:
                    if w == v and p not in done and p not in self.lost)
 
 
+class RunHandle:
+    """One in-flight pool run.
+
+    The pieces were already dispatched to the workers when the handle was
+    created; :meth:`result` runs the master loop (collect arrivals in safe
+    virtual order, re-dispatch after failures, cancel stragglers at
+    acceptance) to completion and returns ``(results, report)``.  Every
+    handle must eventually be resolved — an abandoned handle keeps its
+    run's slot in the pool's active count open, pinning the group.
+    Repeat calls return the cached outcome.
+    """
+
+    def __init__(self, pool: "WorkerPool", ctx: _RunCtx, st: _MasterState,
+                 until, viable, report: RunReport, n: int, wall0: float,
+                 events: "queue.Queue[_Event]"):
+        self._pool = pool
+        self._ctx = ctx
+        self._st = st
+        self._until = until
+        self._viable = viable
+        self._report = report
+        self._n = n
+        self._wall0 = wall0
+        self._events = events
+        self._outcome: Any = None
+        self._resolved = False
+
+    @property
+    def report(self) -> RunReport:
+        """The run's report (complete only after :meth:`result`)."""
+        return self._report
+
+    def cancel(self) -> None:
+        """Abort the run's stragglers (real-clock early exit)."""
+        self._ctx.cancel.set()
+
+    def result(self) -> tuple[dict[int, Any], RunReport]:
+        if self._resolved:
+            if isinstance(self._outcome, BaseException):
+                raise self._outcome
+            return self._outcome
+        try:
+            self._outcome = self._pool._collect(self)
+        except BaseException as e:
+            self._outcome = e
+            raise
+        finally:
+            self._resolved = True
+        return self._outcome
+
+
 class WorkerPool:
     """W threaded workers + a master that collects, re-dispatches, cancels.
 
-    One run at a time (``run`` holds a lock); the pool itself is reusable
-    across many runs — the serving engine keeps one per process.  Stale
-    events from a cancelled run are fenced off by an epoch counter, so a
-    straggler still sleeping from run e cannot pollute run e+1.
+    The pool is reusable across many runs — the serving engine keeps one
+    per process — and since PR 6 runs may overlap: ``run_async`` dispatches
+    immediately and returns a :class:`RunHandle`, so two executors sharing
+    a pool no longer serialize behind a whole-run lock (and queueing behind
+    another run shows up as late ``t_dispatch``, never as inflated
+    ``t_compute``).  Each run posts events to its own queue, so a straggler
+    still sleeping from run e cannot pollute run e+1.
     """
 
     def __init__(self, n_workers: int, *, clock: Clock | None = None,
@@ -182,9 +261,16 @@ class WorkerPool:
         # dispatch claim on real runs: B co-scheduled requests share one
         # n-piece dispatch, so a step costs n pieces, not B*n.
         self.dispatch_count = 0
-        self._run_lock = threading.Lock()
+        # submission bookkeeping: _group numbers shared virtual timelines
+        # (workers reset t_free when they first see a new group), _active
+        # counts unresolved runs, _group_pin holds a group open across
+        # several run_async calls (pool.group()).
+        self._submit_lock = threading.Lock()
         self._epoch = 0
-        self._events: queue.Queue[_Event] = queue.Queue()
+        self._group = 0
+        self._group_pin = 0
+        self._group_t0_wall = 0.0
+        self._active = 0
         self._inbox: list[queue.Queue] = [queue.Queue() for _ in range(n_workers)]
         self._threads = [
             threading.Thread(target=self._worker_loop, args=(w,), daemon=True,
@@ -207,25 +293,55 @@ class WorkerPool:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    @contextlib.contextmanager
+    def group(self):
+        """Pin one shared virtual timeline over several ``run_async`` calls.
+
+        Runs submitted inside the ``with`` block contend for the workers on
+        a single group timeline: per-worker ``t_free`` persists from run to
+        run, so a worker busy with one run's piece delays another run's
+        dispatch (visible as late ``t_dispatch``).  Enter a group while the
+        pool is idle — pinning joins the current group if runs are still
+        active.  Nesting keeps the outer group.
+        """
+        with self._submit_lock:
+            self._group_pin += 1
+            if self._group_pin == 1 and self._active == 0:
+                self._group += 1
+                self._group_t0_wall = self.clock.now()
+        try:
+            yield self
+        finally:
+            with self._submit_lock:
+                self._group_pin -= 1
+
     # -- worker side -------------------------------------------------------
     def _worker_loop(self, w: int) -> None:
-        epoch, t_free, done, failed = -1, 0.0, 0, False
+        group, t_free = -1, 0.0
+        # per-run progress within the current group: epoch -> [done, failed]
+        runs: dict[int, list] = {}
         while True:
             item = self._inbox[w].get()
             if item is _STOP:
                 return
             ctx, piece = item
-            if ctx.epoch != epoch:  # new run: reset the per-run timeline
-                epoch, t_free, done, failed = ctx.epoch, 0.0, 0, False
-            if failed or ctx.cancel.is_set():
+            if ctx.group != group:  # new shared timeline
+                group, t_free, runs = ctx.group, 0.0, {}
+            prog = runs.setdefault(ctx.epoch, [0, False])
+            if prog[1] or (not ctx.clock.virtual and ctx.cancel.is_set()):
+                # a failed worker serves nothing further for that run; a
+                # cancelled real-clock run drops its undispatched pieces.
+                # Virtual mode never skips on cancel: whether the cancel
+                # lands before this dequeue is a wall race, and skipping
+                # would fork the group's shared timeline on it.
                 continue
             fail_at = ctx.faults.fails_at(w)
-            if fail_at is not None and done >= fail_at:
+            if fail_at is not None and prog[0] >= fail_at:
                 # die on this piece; detection at the would-be completion
                 # (core/runtime.py failure semantics)
                 dur = self._duration(ctx, w, piece)
-                t_detect = max(t_free, piece.not_before) + dur
-                failed = True
+                t_detect = max(t_free, ctx.start_at, piece.not_before) + dur
+                prog[1] = True
                 if not ctx.clock.virtual:
                     self._sleep_until(ctx, t_detect)
                 ctx.post(_Event("failure", ctx.epoch, w, piece.idx, t_detect))
@@ -239,13 +355,13 @@ class WorkerPool:
             except Exception as e:  # master re-raises
                 ctx.post(_Event("error", ctx.epoch, w, piece.idx, t_free,
                                 payload=e))
-                failed = True
+                prog[1] = True
                 continue
             dur = self._duration(ctx, w, piece, measured=elapsed)
             stages = self._stage_durations(ctx, w, piece)
-            t_start = max(t_free, piece.not_before)
+            t_start = max(t_free, ctx.start_at, piece.not_before)
             t_fin = t_start + dur
-            t_free, done = t_fin, done + 1
+            t_free, prog[0] = t_fin, prog[0] + 1
             if not ctx.clock.virtual:
                 if not self._sleep_until(ctx, t_fin):
                     continue  # cancelled mid-sleep: drop the late result
@@ -283,6 +399,7 @@ class WorkerPool:
         fault_plan: FaultPlan | None = None,
         delay_model: DelayModel | None = None,
         viable: Callable[[list[int]], bool] | None = None,
+        start_at: float = 0.0,
     ) -> tuple[dict[int, Any], RunReport]:
         """Execute ``pieces`` across the workers until ``until`` accepts.
 
@@ -302,13 +419,33 @@ class WorkerPool:
         re-dispatched.  Returns ({piece id: result} for the consumed
         subset, :class:`RunReport`).
         """
-        with self._run_lock:
-            return self._run_locked(pieces, until, assignment,
-                                    fault_plan or self.fault_plan,
-                                    delay_model if delay_model is not None
-                                    else self.delay_model, viable)
+        return self.run_async(pieces, until, assignment=assignment,
+                              fault_plan=fault_plan, delay_model=delay_model,
+                              viable=viable, start_at=start_at).result()
 
-    def _run_locked(self, pieces, until, assignment, faults, delay, viable):
+    def run_async(
+        self,
+        pieces: Sequence[Callable[[], Any]],
+        until: Callable[[list[int]], list[int] | None],
+        *,
+        assignment: Sequence[int] | None = None,
+        fault_plan: FaultPlan | None = None,
+        delay_model: DelayModel | None = None,
+        viable: Callable[[list[int]], bool] | None = None,
+        start_at: float = 0.0,
+    ) -> RunHandle:
+        """Dispatch ``pieces`` immediately and return a :class:`RunHandle`.
+
+        Several handles may be in flight at once; resolve each with
+        ``handle.result()`` (in any order — events are per-run).  Inside a
+        ``pool.group()`` the runs contend on one shared worker timeline;
+        otherwise each submission starts a fresh one.  ``start_at`` gates
+        every piece of the run to begin no earlier than that group-relative
+        virtual time — the executor's chaining hook for dependent runs.
+        """
+        faults = fault_plan or self.fault_plan
+        delay = (delay_model if delay_model is not None
+                 else self.delay_model)
         if self.clock.virtual and delay is None:
             raise ValueError(
                 "a virtual clock needs a DelayModel: with measured compute "
@@ -316,38 +453,55 @@ class WorkerPool:
                 "dependent, defeating the deterministic clock")
         n = len(pieces)
         owner = self._initial_assignment(n, assignment)
-        self._epoch += 1
-        wall0 = time.perf_counter()
-        ctx = _RunCtx(self._epoch, threading.Event(), faults, delay,
-                      self.clock, self.time_scale, self.clock.now(),
-                      self._events.put)
         thunks = {i: fn for i, fn in enumerate(pieces)}
-        # master state.  Receipt-time state (pending / arrived / last_t) is
-        # OS-scheduling dependent and is used ONLY for the safe-merge bound
-        # and liveness; every decision that shapes the run (decode subset,
-        # re-dispatch targets) reads processing-time state, which the
-        # time-ordered merge makes deterministic.
-        st = _MasterState(owner=owner, thunks=thunks,
-                          pending=[set() for _ in range(self.n_workers)],
-                          last_t=[0.0] * self.n_workers,
-                          proc_t=[0.0] * self.n_workers)
-        for i in range(n):
-            st.pending[owner[i]].add(i)
-        report = RunReport(0.0, 0.0, [], [], [], [], [], dict(owner))
-        try:
+        wall0 = time.perf_counter()
+        events: queue.Queue[_Event] = queue.Queue()
+        with self._submit_lock:
+            if self._group_pin == 0 and self._active == 0:
+                self._group += 1  # fresh timeline for an unpinned lone run
+                self._group_t0_wall = self.clock.now()
+            self._epoch += 1
+            self._active += 1
+            ctx = _RunCtx(self._epoch, self._group, threading.Event(),
+                          faults, delay, self.clock, self.time_scale,
+                          self._group_t0_wall, float(start_at), events.put)
+            # master state.  Receipt-time state (pending / arrived / last_t)
+            # is OS-scheduling dependent and is used ONLY for the safe-merge
+            # bound and liveness; every decision that shapes the run (decode
+            # subset, re-dispatch targets) reads processing-time state,
+            # which the time-ordered merge makes deterministic.
+            st = _MasterState(owner=owner, thunks=thunks,
+                              pending=[set() for _ in range(self.n_workers)],
+                              last_t=[0.0] * self.n_workers,
+                              proc_t=[0.0] * self.n_workers)
+            for i in range(n):
+                st.pending[owner[i]].add(i)
             for w in range(self.n_workers):
                 for i in sorted(st.pending[w]):
                     self._inbox[w].put((ctx, Piece(i, thunks[i])))
                     self.dispatch_count += 1
+        report = RunReport(0.0, 0.0, [], [], [], [], [], dict(owner),
+                           t_submit=float(start_at))
+        return RunHandle(self, ctx, st, until, viable, report, n, wall0,
+                         events)
+
+    def _collect(self, h: RunHandle) -> tuple[dict[int, Any], RunReport]:
+        """Master loop for one submitted run (RunHandle.result)."""
+        st, ctx, report, until, viable = h._st, h._ctx, h._report, h._until, \
+            h._viable
+        try:
             while True:
                 done = self._drain_safe(st, until, viable, report, ctx)
                 if done is not None:
                     report.t_complete = done
-                    report.wall_s = time.perf_counter() - wall0
-                    report.cancelled = sorted(set(range(n)) - set(st.order))
-                    if self.clock.virtual and isinstance(self.clock, FakeClock):
+                    report.wall_s = time.perf_counter() - h._wall0
+                    report.cancelled = sorted(
+                        set(range(h._n)) - set(st.order))
+                    if self.clock.virtual and isinstance(self.clock,
+                                                         FakeClock):
                         self.clock.advance(done)
-                    return ({i: st.results[i] for i in report.subset}, report)
+                    return ({i: st.results[i] for i in report.subset},
+                            report)
                 if not any(st.pending) and not st.heap:
                     if st.lost:
                         # backstop: viable() was optimistic (or absent) and
@@ -357,7 +511,7 @@ class WorkerPool:
                     raise RuntimeError(
                         "pool exhausted: every piece arrived but the "
                         f"completion rule never accepted (arrived={st.order})")
-                ev = self._next_event(ctx)
+                ev = self._next_event(h._events)
                 if ev.kind == "error":
                     raise RuntimeError(
                         f"worker {ev.worker} raised on piece {ev.piece}"
@@ -368,7 +522,9 @@ class WorkerPool:
                     st.pending[ev.worker].discard(ev.piece)
                 heapq.heappush(st.heap, (ev.t, ev.worker, ev.piece, ev))
         finally:
-            ctx.cancel.set()  # abort stragglers; epoch fences stale events
+            ctx.cancel.set()  # abort real-clock stragglers
+            with self._submit_lock:
+                self._active -= 1
 
     def _initial_assignment(self, n: int, counts) -> dict[int, int]:
         owner: dict[int, int] = {}
@@ -388,18 +544,16 @@ class WorkerPool:
                 i += 1
         return owner
 
-    def _next_event(self, ctx: _RunCtx) -> _Event:
+    def _next_event(self, events: "queue.Queue[_Event]") -> _Event:
         deadline = time.monotonic() + self.timeout_s
         while True:
             try:
-                ev = self._events.get(timeout=max(deadline - time.monotonic(),
-                                                  0.01))
+                return events.get(timeout=max(deadline - time.monotonic(),
+                                              0.01))
             except queue.Empty:
                 raise RuntimeError(
                     f"pool stalled: no event within {self.timeout_s}s "
                     "(dead workers without redundancy?)") from None
-            if ev.epoch == ctx.epoch:  # drop stale events from prior runs
-                return ev
 
     def _drain_safe(self, st: _MasterState, until, viable, report,
                     ctx) -> float | None:
@@ -469,16 +623,17 @@ class WorkerPool:
         # pieces, last processed event time) — receipt-order state would
         # make the target, and with it the whole run, scheduling-dependent
         load = {v: st.outstanding(v) for v in live}
-        for p in sorted(st.lost):
-            t_detect = st.lost[p]
-            tgt = min(live, key=lambda v: (load[v], st.proc_t[v], v))
-            load[tgt] += 1
-            st.pending[tgt].add(p)
-            src = st.owner[p]
-            st.owner[p] = tgt
-            report.assignment[p] = tgt
-            report.redispatched.append((p, src, tgt))
-            self._inbox[tgt].put(
-                (ctx, Piece(p, st.thunks[p], not_before=t_detect)))
-            self.dispatch_count += 1
+        with self._submit_lock:
+            for p in sorted(st.lost):
+                t_detect = st.lost[p]
+                tgt = min(live, key=lambda v: (load[v], st.proc_t[v], v))
+                load[tgt] += 1
+                st.pending[tgt].add(p)
+                src = st.owner[p]
+                st.owner[p] = tgt
+                report.assignment[p] = tgt
+                report.redispatched.append((p, src, tgt))
+                self._inbox[tgt].put(
+                    (ctx, Piece(p, st.thunks[p], not_before=t_detect)))
+                self.dispatch_count += 1
         st.lost.clear()

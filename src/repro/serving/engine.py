@@ -155,6 +155,15 @@ class Engine:
         else:
             self._prefill = lambda p, t, ms: prefill(cfg, p, t, max_seq=ms)
             self._decode = lambda p, c, t: decode_step(cfg, p, c, token=t)
+        if cfg.coded_n:
+            # warm the scheme's lru-cached decode matrices at startup so the
+            # first serving step pays steady-state decode cost, not a cold
+            # factorization per fresh k-subset (DESIGN.md §11)
+            from ..core.schemes import warm_decode_cache
+            from ..models.model import _coded_scheme
+
+            warm_decode_cache(_coded_scheme(cfg.coded_scheme, cfg.coded_n,
+                                            cfg.coded_k or None))
 
     def _executor_ctx(self):
         if self.executor is None:

@@ -93,6 +93,16 @@ class StepRecord:
     runs: int           # executor runs issued during the step (counter delta)
     prefill_dispatches: int = 0  # of `dispatches`, issued by admission prefills
     prefill_runs: int = 0        # of `runs`, issued by admission prefills
+    # -- pool span telemetry (DESIGN.md §11): overlap measured, not asserted
+    span_s: float = 0.0     # pool makespan of the step's runs (one group
+    #                         timeline in overlap mode; == busy_s serial)
+    busy_s: float = 0.0     # sum of per-run spans — the serial-equivalent
+    #                         pool occupancy of the step
+    serial_s: float = 0.0   # consumed pieces' raw (unpipelined) stage time
+    overlap_s: float = 0.0  # ship/compute time hidden by streamed chunks:
+    #                         serial_s - booked piece service time
+    prefill_span_s: float = 0.0  # pool time attributed to prefill calls
+    decode_span_s: float = 0.0   # pool time attributed to the decode call
 
 
 @dataclasses.dataclass
@@ -135,13 +145,24 @@ class ServingScheduler:
     ``delay_seed_stride`` re-seeds a seedable pool delay model every step
     so round-trips stay stochastic across steps instead of replaying the
     identical (seed, worker, piece) draw forever.
+
+    ``overlap`` (DESIGN.md §11) issues each step's independent model calls
+    on ONE pool group timeline instead of a fresh idle pool per call: the
+    carried-over batch's decode is dispatched first (its token is due this
+    step), then each admission prefill, every call chained internally
+    (``CodedExecutor.chain``) so its sequential GEMM runs stay causally
+    ordered while the *calls* contend for the same workers.  The step then
+    costs the group's makespan — max completion across calls — rather than
+    the serial sum of per-call costs, and newly admitted lanes join the
+    decode batch the NEXT step (their token values are unchanged; only
+    timing attribution moves).  Ignored when the engine has no executor.
     """
 
     def __init__(self, engine: Engine, *, max_seq: int, max_batch: int = 8,
                  policy: str = "fcfs", eos_id: int | None = None,
                  master_call_s: float = 0.0,
                  fault_drift: StragglerDrift | None = None,
-                 delay_seed_stride: int = 0):
+                 delay_seed_stride: int = 0, overlap: bool = False):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
         if max_batch < 1:
@@ -157,6 +178,7 @@ class ServingScheduler:
         self.fault_drift = fault_drift
         self.delay_seed_stride = int(delay_seed_stride)
         ex = engine.executor
+        self.overlap = bool(overlap) and ex is not None
         self._virtual = (ex is not None
                          and getattr(ex.pool.clock, "virtual", False))
         self._base_delay = ex.pool.delay_model if ex is not None else None
@@ -254,12 +276,31 @@ class ServingScheduler:
         records: list[RequestRecord] = []
         steps: list[StepRecord] = []
         completions: list[Completion] = []
+        ex = self.engine.executor
+        # step-scoped report collector for the StepRecord span telemetry;
+        # _timed_call's temporary hook chains to it, so both modes feed it
+        step_reports: list = []
+        outer = ex.on_report if ex is not None else None
+        if ex is not None:
+            ex.on_report = (lambda r: (step_reports.append(r),
+                                       outer(r) if outer is not None
+                                       else None))
+        try:
+            return self._serve_loop(queue, lanes, cache, t, step, records,
+                                    steps, completions, step_reports)
+        finally:
+            if ex is not None:
+                ex.on_report = outer
+
+    def _serve_loop(self, queue, lanes, cache, t, step, records, steps,
+                    completions, step_reports) -> ServeResult:
         with self.engine.executor_ctx():
             while queue or lanes:
                 if not lanes and queue and queue[0].arrival_s > t:
                     t = queue[0].arrival_s  # idle system: jump to next arrival
                 t_start = t
                 self._arm_step(step)
+                step_reports.clear()
                 d0, r0 = self._counters()
                 # -- admission: arrived requests fill the free lanes ------
                 n_ready = 0
@@ -273,68 +314,223 @@ class ServingScheduler:
                 queue = [q for q in queue
                          if not any(q is r for r in admit)]
                 qdepth = n_ready - len(admit)
-                # -- join-at-prefill (grouped by equal prompt length) -----
-                new_caches = []
-                retired = 0
-                for group in _length_groups(admit):
-                    prompts = np.stack([r.prompt for r in group])
-                    (first, gcache), dt = self._timed_call(
-                        self.engine.prefill_batch, prompts, self.max_seq)
-                    t += dt
-                    glanes = []
-                    for j, r in enumerate(group):
-                        rec = RequestRecord(r.rid, len(r.prompt), r.max_new,
-                                            r.arrival_s, admit_s=t_start,
-                                            first_token_s=t)
-                        lane = _Lane(r, rec, [int(first[j])])
-                        records.append(rec)
-                        glanes.append(lane)
-                    done = [j for j, ln in enumerate(glanes)
-                            if self._finished(ln)]
-                    for j in done:
-                        self._retire(glanes[j], t, completions)
-                        retired += 1
-                    keep = [j for j in range(len(glanes)) if j not in done]
-                    if keep:
-                        lanes.extend(glanes[j] for j in keep)
-                        new_caches.append(
-                            gcache if len(keep) == len(glanes)
-                            else cache_take(gcache, keep))
-                d_pf, r_pf = self._counters()
-                # -- one decode step for the whole running batch ----------
-                n_decoded = len(lanes)
-                if lanes:
-                    parts = ([cache] if cache is not None else []) + new_caches
-                    cache = cache_cat(parts)
-                    last = np.asarray([ln.tokens[-1] for ln in lanes],
-                                      np.int32)
-                    (nxt, cache), dt = self._timed_call(
-                        self.engine.decode_batch, cache, last)
-                    t += dt
-                    for j, ln in enumerate(lanes):
-                        ln.tokens.append(int(nxt[j]))
-                    done = [j for j, ln in enumerate(lanes)
-                            if self._finished(ln)]
-                    for j in done:
-                        self._retire(lanes[j], t, completions)
-                        retired += 1
-                    if done:
-                        keep = [j for j in range(len(lanes)) if j not in done]
-                        lanes = [lanes[j] for j in keep]
-                        cache = cache_take(cache, keep) if keep else None
+                if self.overlap and (admit or lanes):
+                    (lanes, cache, retired, n_decoded, pf_d, pf_r,
+                     i_pf, i_dec, t) = self._overlap_step(
+                        lanes, cache, admit, t_start, records, completions,
+                        step_reports)
                 else:
-                    cache = None
+                    # -- join-at-prefill (grouped by equal prompt length) -
+                    new_caches = []
+                    retired = 0
+                    for group in _length_groups(admit):
+                        prompts = np.stack([r.prompt for r in group])
+                        (first, gcache), dt = self._timed_call(
+                            self.engine.prefill_batch, prompts, self.max_seq)
+                        t += dt
+                        glanes = []
+                        for j, r in enumerate(group):
+                            rec = RequestRecord(r.rid, len(r.prompt),
+                                                r.max_new, r.arrival_s,
+                                                admit_s=t_start,
+                                                first_token_s=t)
+                            lane = _Lane(r, rec, [int(first[j])])
+                            records.append(rec)
+                            glanes.append(lane)
+                        done = [j for j, ln in enumerate(glanes)
+                                if self._finished(ln)]
+                        for j in done:
+                            self._retire(glanes[j], t, completions)
+                            retired += 1
+                        keep = [j for j in range(len(glanes))
+                                if j not in done]
+                        if keep:
+                            lanes.extend(glanes[j] for j in keep)
+                            new_caches.append(
+                                gcache if len(keep) == len(glanes)
+                                else cache_take(gcache, keep))
+                    d_pf, r_pf = self._counters()
+                    pf_d, pf_r = d_pf - d0, r_pf - r0
+                    i_pf = (0, len(step_reports))
+                    # -- one decode step for the whole running batch ------
+                    n_decoded = len(lanes)
+                    if lanes:
+                        parts = (([cache] if cache is not None else [])
+                                 + new_caches)
+                        cache = cache_cat(parts)
+                        last = np.asarray([ln.tokens[-1] for ln in lanes],
+                                          np.int32)
+                        (nxt, cache), dt = self._timed_call(
+                            self.engine.decode_batch, cache, last)
+                        t += dt
+                        for j, ln in enumerate(lanes):
+                            ln.tokens.append(int(nxt[j]))
+                        done = [j for j, ln in enumerate(lanes)
+                                if self._finished(ln)]
+                        for j in done:
+                            self._retire(lanes[j], t, completions)
+                            retired += 1
+                        if done:
+                            keep = [j for j in range(len(lanes))
+                                    if j not in done]
+                            lanes = [lanes[j] for j in keep]
+                            cache = cache_take(cache, keep) if keep else None
+                    else:
+                        cache = None
+                    i_dec = (i_pf[1], len(step_reports))
                 d1, r1 = self._counters()
+                span_s, busy_s, serial_s, overlap_s = self._pool_spans(
+                    step_reports, grouped=self.overlap)
                 steps.append(StepRecord(
                     step, t_start, t, batch=n_decoded,
                     admitted=len(admit), retired=retired, queue_depth=qdepth,
                     dispatches=d1 - d0, runs=r1 - r0,
-                    prefill_dispatches=d_pf - d0, prefill_runs=r_pf - r0))
+                    prefill_dispatches=pf_d, prefill_runs=pf_r,
+                    span_s=span_s, busy_s=busy_s, serial_s=serial_s,
+                    overlap_s=overlap_s,
+                    prefill_span_s=self._pool_spans(
+                        step_reports[i_pf[0]:i_pf[1]],
+                        grouped=self.overlap)[0],
+                    decode_span_s=self._pool_spans(
+                        step_reports[i_dec[0]:i_dec[1]],
+                        grouped=self.overlap)[0]))
                 step += 1
         completions.sort(key=lambda c: c.rid)
         records.sort(key=lambda r: r.rid)
         return ServeResult(records=records, steps=steps,
                            completions=completions, t_end=t)
+
+    def _overlap_step(self, lanes, cache, admit, t_start, records,
+                      completions, step_reports):
+        """One serving step with its model calls issued on ONE pool group
+        timeline (DESIGN.md §11).
+
+        The carried-over batch's decode is dispatched first — its token is
+        due this step — then each admission prefill; every call runs inside
+        ``CodedExecutor.chain`` so its own sequential GEMM runs stay
+        causally ordered, while the calls' pieces contend FIFO on the same
+        workers (queueing shows up as late ``t_dispatch``, never inflated
+        ``t_compute``).  Newly admitted lanes join the decode batch the
+        NEXT step, so decode and prefill are genuinely independent within
+        the step; token values are unchanged vs. serial mode.  The step
+        costs the group's makespan plus one ``master_call_s`` per call;
+        each lane's first token lands when ITS prefill chain drains, and
+        the decode token when the decode chain drains.
+        """
+        ex = self.engine.executor
+        n_calls = 0
+        dec_out = None
+        pf_out = []
+        i_dec = (0, 0)
+        w0 = time.perf_counter()
+        with ex.pool.group():
+            if lanes:
+                last = np.asarray([ln.tokens[-1] for ln in lanes], np.int32)
+                with ex.chain():
+                    dec_out = self.engine.decode_batch(cache, last)
+                n_calls += 1
+                i_dec = (0, len(step_reports))
+            d_mid, r_mid = self._counters()
+            i_pf0 = len(step_reports)
+            for group in _length_groups(admit):
+                prompts = np.stack([r.prompt for r in group])
+                j0 = len(step_reports)
+                with ex.chain():
+                    first, gcache = self.engine.prefill_batch(prompts,
+                                                              self.max_seq)
+                n_calls += 1
+                end = max((r.t_complete for r in step_reports[j0:]),
+                          default=0.0)
+                pf_out.append((group, first, gcache, n_calls, end))
+            i_pf = (i_pf0, len(step_reports))
+        wall = time.perf_counter() - w0
+        d_end, r_end = self._counters()
+        pf_d, pf_r = d_end - d_mid, r_end - r_mid
+        if self._virtual:
+            t_done = max((r.t_complete for r in step_reports), default=0.0)
+            t_end = t_start + n_calls * self.master_call_s + t_done
+        else:
+            t_end = t_start + wall
+        # -- decode results: the token lands when the decode chain drains
+        n_decoded = len(lanes)
+        retired = 0
+        if dec_out is not None:
+            nxt, cache = dec_out
+            if self._virtual:
+                dec_end = max((r.t_complete
+                               for r in step_reports[i_dec[0]:i_dec[1]]),
+                              default=0.0)
+                t_dec = t_start + self.master_call_s + dec_end
+            else:
+                t_dec = t_end
+            for j, ln in enumerate(lanes):
+                ln.tokens.append(int(nxt[j]))
+            done = [j for j, ln in enumerate(lanes) if self._finished(ln)]
+            for j in done:
+                self._retire(lanes[j], t_dec, completions)
+                retired += 1
+            if done:
+                keep = [j for j in range(len(lanes)) if j not in done]
+                lanes = [lanes[j] for j in keep]
+                cache = cache_take(cache, keep) if keep else None
+        else:
+            cache = None
+        # -- prefill results: each group's first token lands when ITS
+        #    chain drains (after the master slots of the calls before it)
+        new_caches = []
+        for (group, first, gcache, k_call, end) in pf_out:
+            ft = (t_start + k_call * self.master_call_s + end
+                  if self._virtual else t_end)
+            glanes = []
+            for j, r in enumerate(group):
+                rec = RequestRecord(r.rid, len(r.prompt), r.max_new,
+                                    r.arrival_s, admit_s=t_start,
+                                    first_token_s=ft)
+                lane = _Lane(r, rec, [int(first[j])])
+                records.append(rec)
+                glanes.append(lane)
+            done = [j for j, ln in enumerate(glanes) if self._finished(ln)]
+            for j in done:
+                self._retire(glanes[j], ft, completions)
+                retired += 1
+            keep = [j for j in range(len(glanes)) if j not in done]
+            if keep:
+                lanes.extend(glanes[j] for j in keep)
+                new_caches.append(gcache if len(keep) == len(glanes)
+                                  else cache_take(gcache, keep))
+        if new_caches:
+            cache = cache_cat(([cache] if cache is not None else [])
+                              + new_caches)
+        return (lanes, cache, retired, n_decoded, pf_d, pf_r, i_pf, i_dec,
+                t_end)
+
+    @staticmethod
+    def _pool_spans(reports, *, grouped: bool) -> tuple:
+        """(span, busy, serial, overlap) pool seconds of a step's reports.
+
+        ``busy`` sums per-run spans (the serial-equivalent pool occupancy);
+        ``span`` is the makespan on the shared group timeline when
+        ``grouped`` (== busy for serial mode, where every run gets a fresh
+        timeline and spans just add); ``serial`` sums the consumed pieces'
+        raw stage durations and ``overlap`` their gap to the booked
+        (pipelined) service time — the ship/compute time hidden by
+        streamed chunks.
+        """
+        busy = serial = hidden = 0.0
+        for r in reports:
+            busy += max(r.t_complete - r.t_submit, 0.0)
+            for tm in r.timings:
+                raw = sum(tm.stages) if tm.stages else tm.t_compute
+                serial += raw
+                hidden += max(raw - tm.t_compute, 0.0)
+        if not reports:
+            return 0.0, 0.0, 0.0, 0.0
+        if grouped:
+            span = max(0.0, max(r.t_complete for r in reports)
+                       - min(r.t_submit for r in reports))
+        else:
+            span = busy
+        return span, busy, serial, hidden
 
     def _finished(self, lane: _Lane) -> bool:
         if len(lane.tokens) >= lane.req.max_new:

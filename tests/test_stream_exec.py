@@ -1,0 +1,307 @@
+"""Streamed scatter/gather + incremental decode (DESIGN.md §11; ISSUE 6).
+
+The load-bearing assertions:
+
+* the pipelined chunk timeline is hand-computable: ``pipelined_time`` pins
+  to the closed form (serial sum at C=1, the bottleneck-stage asymptote as
+  C grows), and ``stream_chunk_count`` picks the smallest C within
+  tolerance of that asymptote;
+* chunked delay models are *bitwise* consistent with their serial form —
+  same rng, same sampling order — so ``chunks`` changes time attribution,
+  never the random world;
+* streamed ``run_segment`` output is **bitwise identical** to unstreamed,
+  for every registered scheme, on both the functional and the executor
+  path (incremental per-column-block decode shares the decode-matrix
+  solve, so there is no extra roundoff to tolerate);
+* on FakeClock the chunked run completes strictly earlier than the serial
+  run whenever ship and compute are comparable, and straggler cancellation
+  still works mid-stream.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coded_conv import conv2d, conv2d_chunked, run_segment
+from repro.core.latency import (PhaseSizes, SystemParams, pipelined_time,
+                                stream_chunk_count)
+from repro.core.netplan import compile_plan, plan_stream_chunks
+from repro.core.schemes import (chunk_bounds, decode_blocks, get_scheme,
+                                resolve_subset, scheme_names,
+                                warm_decode_cache)
+from repro.core.splitting import ConvSpec
+from repro.dist import (CodedExecutor, FakeClock, FaultPlan, RealClock,
+                        SegmentDelay, ShiftExpDelay, per_layer_sizes)
+
+# transfer-heavy testbed: ship and compute comparable, so streaming has
+# something to hide (cf. test_segment_exec.WIFI)
+WIFI = SystemParams(mu_m=2.5e9, theta_m=4e-10, mu_cmp=4e9, theta_cmp=1.35e-9,
+                    mu_rec=1.5e7, theta_rec=3e-7, mu_sen=1.5e7, theta_sen=3e-7)
+
+
+def _chain(depth, size, c=8):
+    specs, pads, acts, s = [], [], [], size
+    for j in range(depth):
+        specs.append(ConvSpec(c_in=3 if j == 0 else c, c_out=c,
+                              h_in=s + 2, w_in=s + 2, kernel=3, stride=1))
+        pads.append(1)
+        acts.append("relu")
+        s = specs[-1].w_out
+    return specs, pads, acts
+
+
+def _linear_chain(depth, size, c=8):
+    specs, pads, acts, s = [], [], [], size
+    for j in range(depth):
+        specs.append(ConvSpec(c_in=3 if j == 0 else c, c_out=c,
+                              h_in=s, w_in=s, kernel=3, stride=1))
+        pads.append(0)
+        acts.append(None)
+        s = specs[-1].w_out
+    return specs, pads, acts
+
+
+def _rand_segment(key, specs):
+    kx, *kw = jax.random.split(key, len(specs) + 1)
+    x = jax.random.normal(kx, (2, specs[0].c_in, specs[0].h_in,
+                               specs[0].w_in), jnp.float32)
+    ws = [jax.random.normal(k, (s.c_out, s.c_in, s.kernel, s.kernel),
+                            jnp.float32) * (s.c_in * s.kernel ** 2) ** -0.5
+          for k, s in zip(kw, specs)]
+    return x, ws
+
+
+_SCHEMES = [("mds", 4, 3), ("replication", 4, 2), ("uncoded", 3, 3),
+            ("lt", 5, 3)]
+
+
+def _make(name, n, k):
+    return get_scheme(name).make(n, k)
+
+
+class TestPipelinedTime:
+    def test_serial_sum_at_one_chunk(self):
+        assert pipelined_time([1.0, 2.0, 3.0], 1) == 6.0
+
+    def test_closed_form(self):
+        # T(C) = sum/C + (C-1) max/C
+        assert pipelined_time([1.0, 2.0, 3.0], 3) == pytest.approx(
+            6.0 / 3 + 2 * 3.0 / 3)
+
+    def test_monotone_to_bottleneck_asymptote(self):
+        stages = [0.4, 1.0, 0.6]
+        ts = [pipelined_time(stages, c) for c in range(1, 30)]
+        assert all(a >= b for a, b in zip(ts, ts[1:]))
+        assert ts[-1] == pytest.approx(1.0, rel=0.1)
+        assert all(t >= max(stages) for t in ts)
+
+    def test_chunk_count_one_when_dominated(self):
+        # one stage dwarfs the rest: nothing to hide, don't chunk
+        assert stream_chunk_count([100.0, 1.0, 1.0]) == 1
+
+    def test_chunk_count_hits_tolerance(self):
+        stages = [1.0, 1.0, 1.0]
+        c = stream_chunk_count(stages, tol=0.5, cap=64)
+        assert pipelined_time(stages, c) <= (1 + 0.5) * max(stages)
+        assert pipelined_time(stages, c - 1) > (1 + 0.5) * max(stages)
+
+    def test_chunk_count_capped(self):
+        assert stream_chunk_count([1.0, 1.0, 1.0], tol=1e-6, cap=8) == 8
+
+    def test_degenerate(self):
+        assert pipelined_time([], 4) == 0.0
+        assert stream_chunk_count([]) == 1
+        assert stream_chunk_count([0.0, 0.0]) == 1
+
+
+class TestChunkBounds:
+    @pytest.mark.parametrize("width,chunks", [(7, 3), (8, 8), (5, 1),
+                                              (3, 9), (16, 4)])
+    def test_partition(self, width, chunks):
+        bounds = chunk_bounds(width, chunks)
+        assert bounds[0][0] == 0 and bounds[-1][1] == width
+        for (a0, b0), (a1, b1) in zip(bounds, bounds[1:]):
+            assert b0 == a1 and a0 < b0
+        assert len(bounds) == max(1, min(chunks, width))
+
+
+class TestChunkedConv:
+    @pytest.mark.parametrize("stride,chunks", [(1, 1), (1, 3), (2, 3),
+                                               (1, 16), (2, 5)])
+    def test_bitwise_equals_plain_conv(self, stride, chunks):
+        kx, kw = jax.random.split(jax.random.PRNGKey(0))
+        x = jax.random.normal(kx, (2, 3, 12, 13), jnp.float32)
+        w = jax.random.normal(kw, (4, 3, 3, 3), jnp.float32)
+        ref = conv2d(x, w, stride)
+        out = conv2d_chunked(x, w, stride, chunks)
+        assert np.array_equal(np.asarray(ref), np.asarray(out))
+
+
+class TestChunkedDelayModels:
+    def _sizes(self):
+        return per_layer_sizes([
+            PhaseSizes(0.0, 2e6, 4e5, 0.0, 0.0),
+            PhaseSizes(0.0, 2e6, 0.0, 4e5, 0.0)])
+
+    def test_segment_delay_stage_times_unchanged(self):
+        a = SegmentDelay(WIFI, self._sizes(), seed=3)
+        b = dataclasses.replace(a, chunks=4)
+        for w in range(3):
+            for p in range(4):
+                assert a.stage_times(w, p) == b.stage_times(w, p)
+
+    def test_segment_delay_piece_time_is_pipelined_substages(self):
+        d = SegmentDelay(WIFI, self._sizes(), seed=3, chunks=4)
+        serial = dataclasses.replace(d, chunks=1)
+        for w in range(3):
+            for p in range(4):
+                subs = [t for _, t in d._substage_times(w, p)]
+                assert d.piece_time(w, p) == pytest.approx(
+                    pipelined_time(subs, 4))
+                assert d.piece_time(w, p) <= serial.piece_time(w, p)
+                # the gap vs the per-layer lumps is the overlapped time
+                assert sum(d.stage_times(w, p)) == pytest.approx(
+                    serial.piece_time(w, p))
+
+    def test_shiftexp_delay_chunked(self):
+        sizes = PhaseSizes(0.0, 2e6, 4e5, 4e5, 0.0)
+        d = ShiftExpDelay(WIFI, sizes, seed=1, chunks=4)
+        serial = dataclasses.replace(d, chunks=1)
+        for w in range(3):
+            st = d.stage_times(w, 0)
+            assert st == serial.stage_times(w, 0)
+            assert d.piece_time(w, 0) == pytest.approx(
+                pipelined_time(st, 4))
+            assert d.piece_time(w, 0) < serial.piece_time(w, 0)
+
+
+class TestIncrementalDecode:
+    @pytest.mark.parametrize("name,n,k", _SCHEMES)
+    @pytest.mark.parametrize("chunks", [1, 2, 4, 16])
+    def test_decode_blocks_bitwise_equals_one_shot(self, name, n, k, chunks):
+        scheme = _make(name, n, k)
+        subset = resolve_subset(scheme, None)
+        rng = np.random.default_rng(7)
+        stacked = jnp.asarray(rng.normal(size=(len(subset), 2, 3, 5, 6)),
+                              jnp.float32)
+        m = stacked.shape[0]
+        ref = scheme.decode_from(subset, stacked.reshape(m, -1)).reshape(
+            (scheme.k,) + stacked.shape[1:])
+        out = decode_blocks(scheme, subset, stacked, chunks=chunks)
+        assert np.array_equal(np.asarray(ref), np.asarray(out))
+
+    @pytest.mark.parametrize("name,n,k", _SCHEMES)
+    def test_warm_decode_cache_counts(self, name, n, k):
+        scheme = _make(name, n, k)
+        warmed = warm_decode_cache(scheme)
+        if name in ("replication", "uncoded"):
+            assert warmed == 0  # selection schemes solve nothing
+        else:
+            assert warmed >= 1
+            # warming again is a no-op: everything already cached
+            assert warm_decode_cache(scheme) == warmed
+
+
+class TestStreamedSegment:
+    @pytest.mark.parametrize("name,n,k", _SCHEMES)
+    def test_streamed_output_bitwise_equals_unstreamed(self, name, n, k):
+        from repro.core.schemes import commutes_elementwise
+
+        if commutes_elementwise(name):
+            specs, pads, acts = _chain(2, 18)
+        else:
+            # linear mixes cannot fuse across interior relu/re-pad: use a
+            # pure-linear depth-2 chain (netplan's decode-point rule)
+            specs, pads, acts = _linear_chain(2, 18)
+        x, ws = _rand_segment(jax.random.PRNGKey(4), specs)
+        scheme = _make(name, n, k)
+        ref = run_segment(x, ws, scheme, specs, pads, acts)
+        out = run_segment(x, ws, scheme, specs, pads, acts, stream_chunks=4)
+        assert np.array_equal(np.asarray(ref), np.asarray(out))
+
+    def test_executor_streamed_matches_and_completes_earlier(self):
+        specs, pads, acts = _chain(2, 18)
+        x, ws = _rand_segment(jax.random.PRNGKey(5), specs)
+        scheme = get_scheme("replication")(6)
+        from repro.core.netplan import segment_layer_sizes
+
+        lsz = per_layer_sizes(segment_layer_sizes(specs, pads, scheme))
+        outs, times = [], []
+        for chunks in (1, 4):
+            delay = SegmentDelay(WIFI, lsz, seed=2, chunks=chunks)
+            with CodedExecutor(3, clock=FakeClock(),
+                               delay_model=delay) as ex:
+                outs.append(run_segment(x, ws, scheme, specs, pads, acts,
+                                        executor=ex, stream_chunks=chunks))
+                times.append(ex.last_report.t_complete)
+        assert np.array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+        # same rng world, every piece's round trip strictly shrinks, and
+        # the k-th order statistic is monotone in componentwise-smaller
+        # piece times: streamed completion is strictly earlier
+        assert times[1] < times[0]
+
+    def test_streamed_raw_stages_exceed_pipelined_compute(self):
+        # the report keeps RAW serial stage durations; their sum minus the
+        # pipelined t_compute is the measured ship/compute overlap
+        specs, pads, acts = _chain(2, 18)
+        x, ws = _rand_segment(jax.random.PRNGKey(6), specs)
+        scheme = get_scheme("uncoded")(4)
+        from repro.core.netplan import segment_layer_sizes
+
+        lsz = per_layer_sizes(segment_layer_sizes(specs, pads, scheme))
+        delay = SegmentDelay(WIFI, lsz, seed=8, chunks=4)
+        with CodedExecutor(4, clock=FakeClock(), delay_model=delay) as ex:
+            run_segment(x, ws, scheme, specs, pads, acts, executor=ex,
+                        stream_chunks=4)
+            report = ex.last_report
+        assert report.timings
+        for t in report.timings:
+            assert len(t.stages) == 2
+            assert sum(t.stages) > t.t_compute  # overlap hid real time
+
+    def test_straggler_cancelled_mid_stream(self):
+        # streamed dispatch keeps segment-granularity cancellation: the
+        # 50x straggler's pieces never make the subset and are cancelled
+        specs, pads, acts = _chain(2, 18)
+        x, ws = _rand_segment(jax.random.PRNGKey(7), specs)
+        scheme = get_scheme("replication")(8)
+        from repro.core.netplan import segment_layer_sizes
+
+        lsz = per_layer_sizes(segment_layer_sizes(specs, pads, scheme))
+        delay = SegmentDelay(WIFI, lsz, seed=5, chunks=4)
+        ref = run_segment(x, ws, scheme, specs, pads, acts)
+        with CodedExecutor(3, clock=FakeClock(), delay_model=delay,
+                           fault_plan=FaultPlan(straggler={0: 50.0})) as ex:
+            out = run_segment(x, ws, scheme, specs, pads, acts, executor=ex,
+                              stream_chunks=4)
+            report = ex.last_report
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+        assert all(report.assignment[p] != 0 for p in report.subset)
+        assert report.cancelled
+
+
+class TestPlannedChunks:
+    def test_plan_stream_chunks_transfer_heavy_vs_compute_heavy(self):
+        # depth-1 so the substage chain is (rec, cmp, sen): a multi-layer
+        # chain would pipeline its equal compute stages against each other
+        specs, pads, _ = _chain(1, 18)
+        scheme = get_scheme("replication")(6)
+        compute_bound = dataclasses.replace(
+            WIFI, theta_rec=1e-12, theta_sen=1e-12,
+            mu_rec=1e12, mu_sen=1e12)
+        c_net = plan_stream_chunks(specs, pads, scheme, WIFI)
+        c_cmp = plan_stream_chunks(specs, pads, scheme, compute_bound)
+        assert c_net > 1      # comparable ship/compute: stream
+        assert c_cmp == 1     # pure compute: nothing to hide
+
+    def test_compiled_plan_carries_chunks(self):
+        from repro.models.cnn import small_cnn_layers
+
+        layers = small_cnn_layers()
+        plan = compile_plan(layers, 4, WIFI, "mds")
+        assert plan.segments
+        for seg in plan.segments:
+            assert seg.chunks >= 1
