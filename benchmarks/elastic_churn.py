@@ -1,0 +1,213 @@
+"""Elastic serving under churn: rateless LT + autoscaler vs a static
+fixed-n fleet on the same departure trace (ISSUE 7; DESIGN.md §12).
+
+Scenario: the serving-under-load testbed (tiny transformer, Poisson
+open-loop traffic, shift-exp piece round-trips on a virtual-clock pool)
+hit by a scripted membership trace instead of a straggler:
+
+* a **flash crowd** commissions 2 fresh workers at t=FLASH_T (capacity
+  arriving ahead of an expected spike);
+* a **rolling restart** takes base workers 1 and 2 down at staggered
+  times — a restarted device loses its resident state, so each restart
+  is a permanent departure plus (for the elastic system only) a
+  replacement join ``DOWN_S`` later.
+
+Both arms see the *same departure process*; what differs is whether the
+system can absorb commissioned capacity:
+
+* **elastic_lt** — ``CodedExecutor(elastic=True)`` with the rateless LT
+  scheme: n follows the live fleet before every coded GEMM (k° fixed —
+  joiners mean more coded rows, never a re-encode of resident pieces),
+  the full churn trace applies (departures AND joins), and a queue-driven
+  :class:`~repro.dist.Autoscaler` adds headroom if the backlog ever costs
+  more than a worker;
+* **fixed_mds** — the static fleet: mds(4,3), no elasticity, no
+  autoscaler, and only the departure events of the same trace (a static
+  deployment has nobody to commission replacements).  After both
+  restarts the 4 pieces of every GEMM round-robin onto the 2 survivors —
+  two pieces deep per worker, so the k-th (3rd) arrival waits for a
+  second-position piece: ~2x per-GEMM latency, and the queue diverges at
+  matched offered load.
+
+Headline (BENCH_elastic.json acceptance): post-churn the elastic arm
+holds deadline attainment within 10% of its pre-churn level, while the
+fixed-n arm loses at least 2x — per-epoch goodput shows WHERE the static
+fleet collapses and the membership timeline shows why the elastic one
+does not.
+
+Run: PYTHONPATH=src python -m benchmarks.elastic_churn [--quick]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+from repro.dist import Autoscaler, ChurnSchedule, CodedExecutor, FakeClock
+from repro.serving import (Engine, LengthDist, PoissonArrivals,
+                           ServingScheduler, Workload, summarize)
+
+from .common import Csv
+from .serving_load import (K_MDS, MASTER_CALL_S, MAX_BATCH, MAX_NEW,
+                           N_PIECES, N_WORKERS, PIECE_S, PROMPTS, VOCAB,
+                           _cfg, serve_delay)
+
+FLASH_T = 0.6         # flash crowd: 2 fresh workers commissioned just
+                      # ahead of the maintenance window, operator-style
+                      # (any earlier and the autoscaler rightly drains
+                      # the idle capacity before the restarts land)
+RESTART_T0 = 0.7      # rolling restart of base workers 1, 2 starts here
+STAGGER_S = 0.15      # consecutive restarts start this far apart
+DOWN_S = 0.25         # replacement joins this long after each departure
+RESTART_WORKERS = (1, 2)
+DEADLINE_S = 100 * PIECE_S  # e2e SLO (arrival -> last token)
+RATE = 26.0           # offered req/s: under capacity at 4 workers,
+                      # over HALF capacity — a 2-worker fleet diverges
+EPOCH_S = 0.25        # per-epoch goodput bucket width
+EPS = 1e-9
+
+
+def churn_trace() -> ChurnSchedule:
+    """The full elastic-system trace: flash-crowd joins + rolling restart
+    (each departure followed by a commissioned replacement)."""
+    return (ChurnSchedule.flash_crowd(FLASH_T, 2)
+            + ChurnSchedule.rolling_restart(RESTART_WORKERS, RESTART_T0,
+                                            down_s=DOWN_S,
+                                            stagger_s=STAGGER_S))
+
+
+def static_projection(trace: ChurnSchedule) -> ChurnSchedule:
+    """What a static fleet experiences: the departures of ``trace``, none
+    of its joins — a fixed-n deployment has nobody commissioning
+    replacements, so restarted workers simply never come back."""
+    return ChurnSchedule(tuple(e for e in trace.events
+                               if e.action == "remove"))
+
+
+def run_arm(requests, scheme: str, k: int, *, elastic: bool,
+            trace: ChurnSchedule, autoscale: bool, max_seq: int,
+            seed: int = 0):
+    """One serving run over ``trace`` on a fresh 4-worker pool."""
+    with CodedExecutor(N_WORKERS, clock=FakeClock(),
+                       delay_model=serve_delay(k, seed),
+                       timeout_s=600.0, elastic=elastic) as ex:
+        auto = (Autoscaler(ex.pool, min_workers=N_WORKERS, max_workers=8,
+                           target_queue=1.0, alpha=0.7, cooldown_steps=3)
+                if autoscale else None)
+        eng = Engine(_cfg(scheme, k), seed=0, executor=ex)
+        sched = ServingScheduler(eng, max_seq=max_seq, max_batch=MAX_BATCH,
+                                 master_call_s=MASTER_CALL_S,
+                                 delay_seed_stride=1, churn=trace,
+                                 autoscaler=auto)
+        return sched.serve(requests)
+
+
+def _attainment(records, deadline_s: float) -> float | None:
+    if not records:
+        return None
+    return sum(1 for r in records if r.e2e_s <= deadline_s) / len(records)
+
+
+def split_attainment(result, t_split: float, deadline_s: float) -> dict:
+    """Deadline attainment for requests arriving before vs from
+    ``t_split`` (the first departure): the post-churn cohort is the one
+    that lives on the degraded fleet."""
+    pre = [r for r in result.records if r.arrival_s < t_split]
+    post = [r for r in result.records if r.arrival_s >= t_split]
+    return {
+        "pre_requests": len(pre),
+        "post_requests": len(post),
+        "pre_attainment": _attainment(pre, deadline_s),
+        "post_attainment": _attainment(post, deadline_s),
+    }
+
+
+def _arm_summary(result, rate: float) -> dict:
+    s = summarize(result, deadline_s=DEADLINE_S, epoch_s=EPOCH_S)
+    s.pop("queue_timeline", None)  # bulky; epochs carry the timeline story
+    s["offered_rps"] = rate
+    s["cohorts"] = split_attainment(result, RESTART_T0, DEADLINE_S)
+    return s
+
+
+def run(csv: Csv, quick: bool = False) -> dict:
+    n_requests = 40 if quick else 72
+    rate = RATE
+    max_seq = max(PROMPTS) + max(MAX_NEW)
+    wl = Workload(PoissonArrivals(rate), LengthDist(PROMPTS),
+                  LengthDist(MAX_NEW), vocab=VOCAB, seed=11)
+    reqs = wl.generate(n_requests)
+    trace = churn_trace()
+    out: dict = {
+        "workload": "Poisson open-loop, tiny transformer, 4-worker virtual "
+                    "pool; flash crowd (+2 workers) at "
+                    f"t={FLASH_T:g}s, rolling restart of workers "
+                    f"{list(RESTART_WORKERS)} from t={RESTART_T0:g}s "
+                    f"(stagger {STAGGER_S:g}s, replacement after "
+                    f"{DOWN_S:g}s)",
+        "n_requests": n_requests, "offered_rps": rate,
+        "deadline_s": DEADLINE_S, "epoch_s": EPOCH_S,
+        "churn": [[e.t, e.action, e.worker] for e in trace.events],
+        "arms": {},
+    }
+    res_e = run_arm(reqs, "lt", K_MDS, elastic=True, trace=trace,
+                    autoscale=True, max_seq=max_seq)
+    out["arms"]["elastic_lt"] = _arm_summary(res_e, rate)
+    res_f = run_arm(reqs, "mds", K_MDS, elastic=False,
+                    trace=static_projection(trace), autoscale=False,
+                    max_seq=max_seq)
+    out["arms"]["fixed_mds"] = _arm_summary(res_f, rate)
+
+    # -- acceptance: the claims this PR is allowed to make ----------------
+    ce = out["arms"]["elastic_lt"]["cohorts"]
+    cf = out["arms"]["fixed_mds"]["cohorts"]
+    elastic_ratio = (ce["post_attainment"] or 0.0) / max(
+        ce["pre_attainment"] or 0.0, EPS)
+    fixed_loss = (cf["pre_attainment"] or 0.0) / max(
+        cf["post_attainment"] or 0.0, EPS)
+    out["acceptance"] = {
+        # elastic LT holds goodput through the trace: post-churn cohort
+        # attainment within 10% of the pre-churn cohort
+        "elastic_pre_attainment": ce["pre_attainment"],
+        "elastic_post_attainment": ce["post_attainment"],
+        "elastic_post_over_pre": elastic_ratio,
+        "elastic_holds_goodput": elastic_ratio >= 0.9,
+        # the static fleet collapses on the same departures: >= 2x loss
+        "fixed_pre_attainment": cf["pre_attainment"],
+        "fixed_post_attainment": cf["post_attainment"],
+        "fixed_loss_factor": min(fixed_loss, 1e6),
+        "fixed_loses_2x": fixed_loss >= 2.0,
+        # and elastic beats fixed outright on the post-churn cohort
+        "elastic_beats_fixed": ((ce["post_attainment"] or 0.0)
+                                >= (cf["post_attainment"] or 0.0)),
+        "elastic_goodput_rps": out["arms"]["elastic_lt"]["goodput_rps"],
+        "fixed_goodput_rps": out["arms"]["fixed_mds"]["goodput_rps"],
+    }
+    acc = out["acceptance"]
+    csv.add("elastic_post_over_pre", elastic_ratio * 100.0,
+            "percent of pre-churn attainment the elastic LT arm holds "
+            "post-churn")
+    csv.add("elastic_fixed_loss_factor", acc["fixed_loss_factor"],
+            "x attainment lost by the static mds(4,3) fleet post-churn")
+    csv.add("elastic_goodput_rps", acc["elastic_goodput_rps"],
+            "req/s within e2e deadline, elastic LT under churn")
+    csv.add("fixed_goodput_rps", acc["fixed_goodput_rps"],
+            "req/s within e2e deadline, fixed-n mds under churn")
+    name = "BENCH_elastic_quick.json" if quick else "BENCH_elastic.json"
+    path = pathlib.Path(__file__).resolve().parent.parent / name
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"churn cohorts (arrive <{RESTART_T0:g}s vs >=): elastic "
+          f"{ce['pre_attainment']:.2f} -> {ce['post_attainment']:.2f} "
+          f"({elastic_ratio:+.0%} of pre) | fixed "
+          f"{cf['pre_attainment']:.2f} -> {cf['post_attainment']:.2f} "
+          f"({acc['fixed_loss_factor']:.1f}x loss)")
+    alive = out["arms"]["elastic_lt"].get("alive_workers", {})
+    print(f"fleet: elastic alive min/max {alive.get('min')}/"
+          f"{alive.get('max')}, goodput elastic "
+          f"{acc['elastic_goodput_rps']:.1f} vs fixed "
+          f"{acc['fixed_goodput_rps']:.1f} req/s (wrote {path.name})")
+    return out
+
+
+if __name__ == "__main__":
+    run(Csv(), quick="--quick" in sys.argv[1:])

@@ -10,6 +10,7 @@ from .common import Csv
 def main() -> None:
     from . import (
         adaptive_replan,
+        elastic_churn,
         ext_hetero,
         fig4_overhead,
         fig5_scenario1,
@@ -39,6 +40,7 @@ def main() -> None:
         ("adaptive", adaptive_replan.run),
         ("pipeline", pipeline_depth.run),
         ("serving", serving_load.run),
+        ("elastic", elastic_churn.run),
         ("kernels", kernels_micro.run),
         ("roofline", roofline.run),
         ("sim_speedup", sim_speedup.run),

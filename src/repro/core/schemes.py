@@ -662,9 +662,32 @@ class LTScheme:
     c: float = 0.1
     delta: float = 0.05
 
+    # rateless: fresh coded rows can be minted beyond n without touching
+    # the first n rows (see extend) — the elasticity-native property the
+    # executor keys on (``getattr(scheme, "rateless", False)``).
+    rateless = True
+
     def __post_init__(self):
         if not 1 <= self.k <= self.n:
             raise ValueError(f"need 1 <= k <= n, got n={self.n} k={self.k}")
+
+    def extend(self, extra: int) -> "LTScheme":
+        """Rateless extension: an (n + extra, k) scheme whose first n coded
+        rows are IDENTICAL to this one's.
+
+        ``LTCode.sample_encoding_matrix(m, seed)`` draws rows sequentially
+        from one ``default_rng(seed)`` stream, so sampling more rows never
+        perturbs the prefix — surviving workers' pieces stay valid with no
+        re-encode, and a late joiner just gets rows [n, n + extra).  This
+        is what MDS structurally cannot do (its generator is a function of
+        n), and why churn makes LT the native serving code (DESIGN.md §12).
+        """
+        if extra < 0:
+            raise ValueError(f"need extra >= 0, got {extra}")
+        if extra == 0:
+            return self
+        return LTScheme(self.n + extra, self.k, seed=self.seed, c=self.c,
+                        delta=self.delta)
 
     @property
     def r(self) -> int:

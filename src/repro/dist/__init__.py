@@ -8,6 +8,7 @@ on injected failures.  ``FakeClock`` + ``DeterministicDelay`` make every
 k-of-n saving measurable.
 """
 from .adaptive import AdaptiveExecutor, AdaptivePlan, AdaptivePlanner, gemm_spec
+from .autoscale import Autoscaler, CostModel, ScaleDecision
 from .clock import (
     Clock,
     FakeClock,
@@ -17,6 +18,8 @@ from .clock import (
 )
 from .executor import CodedExecutor, ExecHandle, decodable_prefix
 from .faults import (
+    ChurnEvent,
+    ChurnSchedule,
     DelayModel,
     DeterministicDelay,
     FaultPlan,
@@ -25,13 +28,24 @@ from .faults import (
     StragglerDrift,
     per_layer_sizes,
 )
-from .pool import Arrival, Piece, PieceTiming, RunHandle, RunReport, WorkerPool
+from .pool import (
+    Arrival,
+    Piece,
+    PieceTiming,
+    RunHandle,
+    RunReport,
+    Undecodable,
+    WorkerPool,
+)
 
 __all__ = [
     "AdaptiveExecutor",
     "AdaptivePlan",
     "AdaptivePlanner",
     "gemm_spec",
+    "Autoscaler",
+    "CostModel",
+    "ScaleDecision",
     "Clock",
     "FakeClock",
     "RealClock",
@@ -40,6 +54,8 @@ __all__ = [
     "CodedExecutor",
     "ExecHandle",
     "decodable_prefix",
+    "ChurnEvent",
+    "ChurnSchedule",
     "DelayModel",
     "DeterministicDelay",
     "FaultPlan",
@@ -52,5 +68,6 @@ __all__ = [
     "PieceTiming",
     "RunHandle",
     "RunReport",
+    "Undecodable",
     "WorkerPool",
 ]

@@ -155,18 +155,31 @@ class AdaptivePlanner:
 
     # -- re-plan -----------------------------------------------------------
     def plan(self, spec: ConvSpec, n_pieces: int, n_workers: int,
-             *, fixed_k: int | None = None) -> AdaptivePlan:
+             *, fixed_k: int | None = None,
+             workers: Sequence[int] | None = None) -> AdaptivePlan:
         """Re-solve k° (remainder-aware) and the piece allocation from the
         current profiles.  ``fixed_k`` pins the split (schemes whose k is
-        structural — replication, uncoded) so only the allocation adapts."""
+        structural — replication, uncoded) so only the allocation adapts.
+        ``workers`` names the dispatchable candidates explicitly (elastic
+        fleets): the allocation is solved over THEIR speeds, positionally —
+        without it a churned fleet would get counts sized to the wrong
+        worker set."""
         params = self.params_hat()
         if fixed_k is not None:
             k = fixed_k
         else:
             k = k_circ_remainder_aware(spec, n_pieces, params)
         assignment = None
-        if self.ready and n_workers > 0:
-            assignment = allocate_pieces(self.speeds(n_workers), n_pieces)
+        if self.ready:
+            if workers is not None:
+                ws = [int(w) for w in workers]
+                if ws:
+                    sp = self.speeds(max(ws) + 1)
+                    assignment = allocate_pieces([sp[w] for w in ws],
+                                                 n_pieces)
+            elif n_workers > 0:
+                assignment = allocate_pieces(self.speeds(n_workers),
+                                             n_pieces)
         return AdaptivePlan(k=k, n_pieces=n_pieces, assignment=assignment,
                             params=params, from_telemetry=self.ready)
 
@@ -215,19 +228,35 @@ class AdaptiveExecutor(CodedExecutor):
 
     def plan_matmul(self, scheme: CodingScheme, scheme_name: str,
                     n_tokens: int, d_in: int, d_out: int
-                    ) -> tuple[int | None, Sequence[int] | None]:
-        """Re-plan one coded GEMM: returns (k or None to keep the scheme's,
-        per-worker assignment or None for round-robin) and arms the
-        post-run observation with this GEMM's phase sizes."""
+                    ) -> tuple[int | None, int | None, Sequence[int] | None]:
+        """Re-plan one coded GEMM: returns (n or None to keep the scheme's,
+        k or None likewise, per-worker assignment or None for round-robin)
+        and arms the post-run observation with this GEMM's phase sizes.
+
+        Membership drives n (elastic fleets follow the live worker count);
+        k is profile-driven k° for MDS, structural ``redundancy_policy``
+        for selection schemes when n moved, and untouched for rateless
+        schemes (LT keeps k — more members just mean more coded rows)."""
+        cand = self.pool.dispatch_preview(self._base_workers)
+        n_new = self._elastic_n(scheme)
+        n_eff = n_new if n_new is not None else scheme.n
         spec = gemm_spec(n_tokens, d_in, d_out)
         adapt_k = scheme_name in ("mds", "coded")  # k° is an MDS notion
-        plan = self.planner.plan(
-            spec, scheme.n, self.pool.n_workers,
-            fixed_k=None if adapt_k else scheme.k)
-        k = plan.k if adapt_k else None
-        self.arm_observation(phase_sizes(spec, scheme.n,
+        if adapt_k:
+            fixed_k = None
+        elif n_new is None or getattr(scheme, "rateless", False):
+            fixed_k = scheme.k
+        else:
+            fixed_k = type(scheme).redundancy_policy(n_eff)
+        plan = self.planner.plan(spec, n_eff, len(cand), fixed_k=fixed_k,
+                                 workers=cand)
+        if adapt_k:
+            k = plan.k
+        else:
+            k = fixed_k if fixed_k != scheme.k else None
+        self.arm_observation(phase_sizes(spec, n_eff,
                                          plan.k if adapt_k else scheme.k))
-        return k, plan.assignment
+        return n_new, k, plan.assignment
 
     def run(self, scheme: CodingScheme,
             piece_fns: Sequence[Callable[[], Any]], *,
@@ -240,8 +269,13 @@ class AdaptiveExecutor(CodedExecutor):
         timings back into the planner (``sizes`` — or the pending sizes a
         ``plan_matmul`` call armed — tell it the work content)."""
         if assignment is None and speeds is None and self.planner.ready:
-            assignment = allocate_pieces(
-                self.planner.speeds(self.pool.n_workers), scheme.n)
+            # allocate over the workers this run can actually dispatch to —
+            # pool.n_workers counts departed members too under churn
+            cand = self.pool.dispatch_preview(self._base_workers)
+            if cand:
+                sp = self.planner.speeds(max(cand) + 1)
+                assignment = allocate_pieces([sp[w] for w in cand],
+                                             scheme.n)
         self._runs += 1
         probe = self.probe_every > 0 and self._runs % self.probe_every == 0
         if probe and assignment is not None and 0 in assignment:

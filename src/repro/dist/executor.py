@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from ..core.schemes import CodingScheme, decode_blocks
 from .clock import Clock
-from .faults import DelayModel, FaultPlan
+from .faults import ChurnSchedule, DelayModel, FaultPlan
 from .pool import RunHandle, RunReport, WorkerPool
 
 __all__ = ["CodedExecutor", "ExecHandle", "decodable_prefix"]
@@ -104,7 +104,8 @@ class CodedExecutor:
                  clock: Clock | None = None,
                  delay_model: DelayModel | None = None,
                  fault_plan: FaultPlan | None = None,
-                 time_scale: float = 1.0, timeout_s: float = 120.0):
+                 time_scale: float = 1.0, timeout_s: float = 120.0,
+                 elastic: bool = False):
         if pool is None:
             if n_workers is None:
                 raise ValueError("need n_workers or an existing pool")
@@ -115,6 +116,16 @@ class CodedExecutor:
             raise ValueError(f"n_workers={n_workers} != pool.n_workers="
                              f"{pool.n_workers}")
         self.pool = pool
+        # elastic membership (DESIGN.md §12): an elastic executor re-sizes
+        # n to the live fleet via plan_matmul and dispatches to whoever is
+        # currently a member (joiners included).  A fixed-fleet executor
+        # (the default) pins dispatch to the workers alive at construction:
+        # a joiner holds no resident partition of its model, so handing it
+        # pieces would be incoherent — under churn it degrades to the
+        # SURVIVING SUBSET of its original fleet instead.
+        self.elastic = bool(elastic)
+        self._base_workers = (None if self.elastic
+                              else list(pool.alive_workers()))
         self.last_report: RunReport | None = None
         # total coded runs this executor has issued; with pool.dispatch_count
         # this gives dispatches-per-run, the batching amortization evidence
@@ -156,6 +167,99 @@ class CodedExecutor:
         here; ``AdaptiveExecutor`` overrides it to feed its planner —
         execution layers call it unconditionally so segment runs train
         the estimator without caring which executor they were handed."""
+
+    def _elastic_n(self, scheme: CodingScheme) -> int | None:
+        """New n for the next run, or None when unchanged / not elastic.
+        The fleet must still cover k — fewer members than k cannot decode,
+        so the scheme keeps its n and survives on re-dispatch instead."""
+        if not self.elastic:
+            return None
+        alive = len(self.pool.dispatch_preview())
+        if alive >= scheme.k and alive != scheme.n:
+            return alive
+        return None
+
+    def plan_matmul(self, scheme: CodingScheme, scheme_name: str,
+                    n_tokens: int, d_in: int, d_out: int):
+        """Pre-dispatch re-plan hook: ``(n_new, k_new, assignment)`` with
+        None for "keep what you have" (models/model.py consumes this).
+
+        The base executor only reacts to MEMBERSHIP: when elastic and the
+        live fleet no longer matches scheme.n, n follows the fleet.  k is
+        scheme-typed — rateless codes (LT) keep k (extra members just mean
+        more coded rows, no re-encode), fixed-structure codes re-solve
+        their own ``redundancy_policy`` because their generator bakes n in.
+        ``AdaptiveExecutor`` overrides this with the profile-driven k°.
+        """
+        n_new = self._elastic_n(scheme)
+        if n_new is None:
+            return None, None, None
+        if getattr(scheme, "rateless", False):
+            return n_new, None, None
+        return n_new, type(scheme).redundancy_policy(n_new), None
+
+    def run_elastic(
+        self,
+        scheme: CodingScheme,
+        piece_fns: Sequence[Callable[[], Any]],
+        *,
+        churn: ChurnSchedule,
+        fresh_piece: Callable[[CodingScheme, int], Callable[[], Any]] | None
+            = None,
+        pieces_per_join: int = 1,
+        assignment: Sequence[int] | None = None,
+        fault_plan: FaultPlan | None = None,
+        delay_model: DelayModel | None = None,
+        decode_chunks: int = 1,
+        start_at: float | None = None,
+    ) -> ExecHandle:
+        """One coded run under a scripted mid-run churn trace.
+
+        Joins are applied first (the pool grows), departures/drains are
+        scripted at their virtual instants, and — for rateless schemes —
+        each joiner receives ``pieces_per_join`` FRESH coded pieces via the
+        scheme's ``extend`` (piece ids continue past ``scheme.n``; resident
+        workers' pieces are untouched, no re-encode).  ``fresh_piece(ext,
+        idx)`` must build the thunk computing coded row ``idx`` of the
+        extended scheme ``ext``.  Fixed-n schemes ignore ``fresh_piece``:
+        their joiners idle and the run lives on its surviving subset.
+        Returns an :class:`ExecHandle` whose decode uses the extended
+        scheme.
+        """
+        if len(piece_fns) != scheme.n:
+            raise ValueError(
+                f"scheme.n={scheme.n} but got {len(piece_fns)} pieces")
+        base = list(self.pool.alive_workers())
+        ext = scheme
+        extras: list[tuple[Callable[[], Any], int, float]] = []
+        for e in churn.events:
+            if e.action == "join":
+                w = self.pool.add_worker()
+                if fresh_piece is not None and getattr(scheme, "rateless",
+                                                       False):
+                    for _ in range(int(pieces_per_join)):
+                        ext = ext.extend(1)
+                        idx = ext.n - 1
+                        extras.append((fresh_piece(ext, idx), w, e.t))
+            elif e.action == "remove":
+                self.pool.remove_worker(e.worker, at=e.t)
+            else:
+                self.pool.drain(e.worker, at=e.t)
+        until = lambda order: decodable_prefix(ext, order)
+        if start_at is None:
+            start_at = self._chain_t if self._chain_t is not None else 0.0
+        handle = self.pool.run_async(
+            piece_fns,
+            until,
+            assignment=assignment,
+            fault_plan=fault_plan,
+            delay_model=delay_model,
+            viable=lambda ids: ext.decodable(ids),
+            start_at=start_at,
+            workers=base,       # residents hold pieces; joiners get extras
+            extra_pieces=extras,
+        )
+        return ExecHandle(self, ext, handle, int(decode_chunks))
 
     def run_async(
         self,
@@ -206,6 +310,10 @@ class CodedExecutor:
             # remains" semantics)
             viable=lambda ids: scheme.decodable(ids),
             start_at=start_at,
+            # fixed-fleet executors never dispatch to post-construction
+            # joiners (no resident partition); elastic ones take the fleet
+            # as it stands
+            workers=self._base_workers,
         )
         return ExecHandle(self, scheme, handle, int(decode_chunks))
 

@@ -36,6 +36,8 @@ from .clock import pipelined_time
 __all__ = [
     "FaultPlan",
     "StragglerDrift",
+    "ChurnEvent",
+    "ChurnSchedule",
     "DelayModel",
     "DeterministicDelay",
     "ShiftExpDelay",
@@ -91,6 +93,99 @@ class StragglerDrift:
         return plan
 
 
+CHURN_ACTIONS = ("join", "remove", "drain")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnEvent:
+    """One scripted membership change at virtual time ``t``.
+
+    ``join`` adds a brand-new worker (``worker`` must be None — the pool
+    assigns the next id); ``remove`` is a permanent departure, treated as a
+    failure for in-flight pieces; ``drain`` stops new dispatches to the
+    worker while everything already queued on it completes.
+    """
+
+    t: float
+    action: str
+    worker: int | None = None
+
+    def __post_init__(self):
+        if self.action not in CHURN_ACTIONS:
+            raise ValueError(f"action must be one of {CHURN_ACTIONS}, "
+                             f"got {self.action!r}")
+        if self.t < 0.0:
+            raise ValueError(f"need t >= 0, got {self.t}")
+        if self.action == "join" and self.worker is not None:
+            raise ValueError("join events name no worker: the pool assigns "
+                             "the next id at application time")
+        if self.action != "join" and self.worker is None:
+            raise ValueError(f"{self.action} needs a worker id")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnSchedule:
+    """Deterministic membership script for an elastic pool (DESIGN.md §12).
+
+    ``events`` is a time-ordered tuple of :class:`ChurnEvent`; the executor
+    (``CodedExecutor.run_elastic``) applies them onto one run's virtual
+    timeline, and the serving scheduler applies them at step boundaries
+    (an event fires at the first step whose start time reaches ``t``).
+    Like :class:`FaultPlan`, a schedule is pure data — applying the same
+    schedule to the same seeds replays the same run bit-for-bit.
+    """
+
+    events: tuple = ()
+
+    def __post_init__(self):
+        evs = tuple(self.events)
+        ts = [e.t for e in evs]
+        if ts != sorted(ts):
+            raise ValueError(f"events must be time-ordered, got ts={ts}")
+        object.__setattr__(self, "events", evs)
+
+    def __add__(self, other: "ChurnSchedule") -> "ChurnSchedule":
+        merged = sorted(self.events + other.events,
+                        key=lambda e: (e.t, e.action, e.worker or -1))
+        return ChurnSchedule(tuple(merged))
+
+    def until(self, t: float) -> tuple:
+        """Events with event-time <= t (the scheduler's step-boundary cut)."""
+        return tuple(e for e in self.events if e.t <= t)
+
+    @staticmethod
+    def flash_crowd(t: float, n_join: int) -> "ChurnSchedule":
+        """``n_join`` fresh workers commissioned at once (scale-out burst)."""
+        return ChurnSchedule(tuple(ChurnEvent(t, "join")
+                                   for _ in range(n_join)))
+
+    @staticmethod
+    def rolling_restart(workers: Sequence[int], t0: float, *,
+                        down_s: float, stagger_s: float) -> "ChurnSchedule":
+        """Restart ``workers`` one at a time: each is removed (a restarted
+        device loses its resident state, so it departs permanently) and a
+        replacement joins ``down_s`` later; consecutive restarts start
+        ``stagger_s`` apart."""
+        evs = []
+        for i, w in enumerate(workers):
+            t = t0 + i * stagger_s
+            evs.append(ChurnEvent(t, "remove", int(w)))
+            evs.append(ChurnEvent(t + down_s, "join"))
+        return ChurnSchedule(tuple(sorted(
+            evs, key=lambda e: (e.t, e.action, e.worker or -1))))
+
+    @staticmethod
+    def departures(workers: Sequence[int], ts: Sequence[float]
+                   ) -> "ChurnSchedule":
+        """Permanent departures of ``workers`` at the matching times."""
+        if len(workers) != len(ts):
+            raise ValueError("need one departure time per worker")
+        evs = sorted((ChurnEvent(float(t), "remove", int(w))
+                      for w, t in zip(workers, ts)),
+                     key=lambda e: (e.t, e.worker))
+        return ChurnSchedule(tuple(evs))
+
+
 @runtime_checkable
 class DelayModel(Protocol):
     """Modeled round-trip seconds for one coded piece on one worker."""
@@ -103,7 +198,9 @@ class DeterministicDelay:
     """Fixed per-worker piece duration — the test clock's workhorse.
 
     ``per_worker`` is either one float (uniform pool) or a sequence with
-    one duration per worker.
+    one duration per worker.  Worker ids past the table wrap around it —
+    elastic pools mint fresh ids (``add_worker``), and a joiner must get a
+    deterministic duration, not an IndexError.
     """
 
     per_worker: float | Sequence[float] = 1.0
@@ -111,7 +208,7 @@ class DeterministicDelay:
     def piece_time(self, worker: int, piece: int) -> float:
         if isinstance(self.per_worker, (int, float)):
             return float(self.per_worker)
-        return float(self.per_worker[worker])
+        return float(self.per_worker[worker % len(self.per_worker)])
 
 
 @dataclasses.dataclass(frozen=True)

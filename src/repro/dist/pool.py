@@ -43,6 +43,19 @@ lands before a dequeue is a wall-clock race, and skipping would fork the
 shared group timeline on it.  Real-clock runs keep the skip (a cancelled
 run's undispatched pieces are dropped) because there wall order *is* the
 semantics.
+
+Elastic membership (DESIGN.md §12): the fleet is never static.
+``add_worker`` commissions a fresh worker (ids only grow — a departed id
+is never reused), ``drain`` stops new dispatches while everything already
+queued completes, and ``remove_worker`` is a permanent departure whose
+in-flight pieces fail through the existing re-dispatch path.  On a
+virtual clock, mid-run departures must be *scripted* (``at=`` — a
+group-relative virtual time): the worker itself posts the failure at the
+departure instant, which keeps the time-ordered merge deterministic
+(there is no deterministic "now" inside a virtual run for an unscripted
+removal to bind to).  A run whose obtainable piece set can never satisfy
+its completion rule raises the typed :class:`Undecodable` instead of
+hanging or spinning the re-dispatch loop.
 """
 from __future__ import annotations
 
@@ -58,10 +71,17 @@ from .clock import Clock, FakeClock, RealClock
 from .faults import DelayModel, FaultPlan
 
 __all__ = ["Piece", "Arrival", "PieceTiming", "RunReport", "RunHandle",
-           "WorkerPool"]
+           "Undecodable", "WorkerPool"]
 
 _STOP = object()
 _MIN_DUR = 1e-9  # keeps per-worker virtual timelines strictly increasing
+
+
+class Undecodable(RuntimeError):
+    """The run's completion rule can never be satisfied from the pieces
+    still obtainable (too many workers dead, removed, or draining) — the
+    typed alternative to hanging on events that will never come or
+    re-dispatching forever."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +191,10 @@ class _MasterState:
     lost: dict[int, float] = dataclasses.field(default_factory=dict)
     results: dict[int, Any] = dataclasses.field(default_factory=dict)
     order: list[int] = dataclasses.field(default_factory=list)
+    # re-dispatch rounds so far; bounded (each round kills >= 1 worker or
+    # re-places every lost piece, so exceeding the worker count means the
+    # obtainable set can never decode)
+    redispatch_rounds: int = 0
 
     def outstanding(self, v: int) -> int:
         """Pieces assigned to v not yet *processed* as arrivals — the
@@ -271,6 +295,17 @@ class WorkerPool:
         self._group_pin = 0
         self._group_t0_wall = 0.0
         self._active = 0
+        # elastic membership (DESIGN.md §12): per-worker status plus the
+        # scripted departure/drain instants, each bound to the group whose
+        # timeline they fire on.  n_workers is the total slot count — ids
+        # only grow; a departed worker keeps its id forever.
+        self._status: dict[int, str] = {w: "alive" for w in range(n_workers)}
+        self._leave_at: dict[int, tuple[int, float]] = {}
+        self._drain_at: dict[int, tuple[int, float]] = {}
+        self.membership_log: list[tuple[str, int]] = []
+        # in-flight runs (epoch -> (ctx, state)): immediate removal posts
+        # its failure events to these
+        self._live: dict[int, tuple] = {}
         self._inbox: list[queue.Queue] = [queue.Queue() for _ in range(n_workers)]
         self._threads = [
             threading.Thread(target=self._worker_loop, args=(w,), daemon=True,
@@ -315,6 +350,160 @@ class WorkerPool:
             with self._submit_lock:
                 self._group_pin -= 1
 
+    # -- elastic membership (DESIGN.md §12) --------------------------------
+    def add_worker(self) -> int:
+        """Commission a brand-new worker; returns its id (ids only grow).
+
+        The joiner is dispatchable immediately for *new* runs; runs already
+        in flight never re-target it (their master state was sized at
+        submit), so a join can land mid-run without racing the merge —
+        rateless executors hand joiners fresh pieces explicitly
+        (``extra_pieces``).
+        """
+        with self._submit_lock:
+            w = self.n_workers
+            self.n_workers += 1
+            self._status[w] = "alive"
+            self._inbox.append(queue.Queue())
+            th = threading.Thread(target=self._worker_loop, args=(w,),
+                                  daemon=True, name=f"cocoi-worker-{w}")
+            self._threads.append(th)
+            self.membership_log.append(("join", w))
+        th.start()
+        return w
+
+    def drain(self, w: int, *, at: float | None = None) -> None:
+        """Stop dispatching to ``w``; everything already queued on it still
+        completes (nothing is lost, so no failure fires).  ``at`` scripts
+        the drain at a group-relative virtual time: re-dispatches detected
+        before ``at`` may still target ``w``, later ones avoid it."""
+        with self._submit_lock:
+            s = self._status.get(w)
+            if s is None:
+                raise KeyError(f"unknown worker {w}")
+            if s != "alive":
+                raise ValueError(f"worker {w} is not alive (status={s!r})")
+            if at is not None:
+                if not self.clock.virtual:
+                    raise ValueError("scripted drain (at=) needs a virtual "
+                                     "clock; real-clock pools drain now")
+                self._drain_at[w] = (self._sched_group(), float(at))
+            self._status[w] = "draining"
+            self.membership_log.append(("drain", w))
+
+    def remove_worker(self, w: int, *, at: float | None = None) -> None:
+        """Permanently remove ``w``; in-flight pieces fail through the
+        normal re-dispatch path.
+
+        ``at`` (virtual clocks only) scripts the departure at that
+        group-relative virtual time: pieces finishing by ``at`` still
+        count, later ones are lost with detection at ``at`` itself — the
+        worker posts the failure, keeping the merge deterministic.  With
+        ``at=None`` the removal is immediate: a virtual pool must be idle
+        (no deterministic "now" exists mid-run — script it instead), a
+        real-clock pool posts a failure to every in-flight run at the
+        current group-relative time.
+        """
+        with self._submit_lock:
+            s = self._status.get(w)
+            if s is None:
+                raise KeyError(f"unknown worker {w}")
+            if s in ("removed", "leaving"):
+                raise ValueError(f"worker {w} already removed (status={s!r})")
+            if at is not None:
+                if not self.clock.virtual:
+                    raise ValueError("scripted removal (at=) needs a virtual"
+                                     " clock; real-clock pools remove now")
+                self._status[w] = "leaving"
+                self._leave_at[w] = (self._sched_group(), float(at))
+            else:
+                if self.clock.virtual and self._active > 0:
+                    raise ValueError(
+                        "cannot remove a worker mid-run on a virtual clock "
+                        "without at=: no deterministic removal time exists "
+                        "— script it (remove_worker(w, at=t))")
+                self._status[w] = "removed"
+                for epoch, (ctx, st) in list(self._live.items()):
+                    if w >= len(st.pending):
+                        continue  # w joined after this run; holds no pieces
+                    t_rm = max((self.clock.now() - ctx.t0_wall)
+                               / max(self.time_scale, 1e-12), 0.0)
+                    ctx.post(_Event("failure", epoch, w, -1, t_rm))
+            self.membership_log.append(("remove", w))
+
+    def worker_status(self, w: int) -> str:
+        """'alive' | 'draining' | 'leaving' (scripted departure pending) |
+        'removed'."""
+        try:
+            return self._status[w]
+        except KeyError:
+            raise KeyError(f"unknown worker {w}") from None
+
+    def alive_workers(self) -> list[int]:
+        """Workers with status 'alive' — lame ducks (draining / scripted
+        leavers) excluded."""
+        with self._submit_lock:
+            return [w for w in range(self.n_workers)
+                    if self._status[w] == "alive"]
+
+    def dispatch_preview(self, restrict: Sequence[int] | None = None
+                         ) -> list[int]:
+        """Workers a run submitted *now* would dispatch to (scripted
+        leavers/drainers whose departure binds to the upcoming timeline
+        included — they are live until their instant).  ``restrict``
+        intersects with a caller-held membership snapshot (the fixed-fleet
+        executors' surviving-subset view)."""
+        with self._submit_lock:
+            cand = self._members_for_group(self._sched_group())
+        if restrict is not None:
+            allowed = {int(v) for v in restrict}
+            cand = [w for w in cand if w in allowed]
+        return cand
+
+    def _sched_group(self) -> int:
+        """Group a scripted membership event binds to: the open group when
+        one is active/pinned, else the next group a submission creates.
+        Callers hold _submit_lock."""
+        if self._group_pin > 0 or self._active > 0:
+            return self._group
+        return self._group + 1
+
+    def _members_for_group(self, g: int) -> list[int]:
+        """Dispatchable workers on group g's timeline.  Callers hold
+        _submit_lock."""
+        out = []
+        for w in range(self.n_workers):
+            s = self._status[w]
+            if s == "alive":
+                out.append(w)
+            elif s == "leaving" and self._leave_at[w][0] >= g:
+                out.append(w)   # departs later on this very timeline
+            elif s == "draining" and self._drain_at.get(w, (-1, 0.0))[0] >= g:
+                out.append(w)   # scripted drain: still open for dispatch
+        return out
+
+    def _accepts_redispatch(self, v: int, group: int, t_detect: float) -> bool:
+        """May a piece detected-lost at ``t_detect`` be re-placed on v?
+        Not on removed/draining workers, nor past a scripted drain or
+        departure instant on this group's timeline.  (Re-placing *before*
+        a scripted departure is allowed: if the piece loses the race the
+        departure fails it and the next round moves it on — each such
+        round lands the leaver in ``st.dead``, so the loop terminates.)
+        Callers hold _submit_lock."""
+        s = self._status.get(v)
+        if s == "alive":
+            return True
+        if s == "leaving":
+            g, t = self._leave_at[v]
+            return g > group or (g == group and t_detect < t)
+        if s == "draining":
+            d = self._drain_at.get(v)
+            if d is None:
+                return False
+            g, t = d
+            return g > group or (g == group and t_detect < t)
+        return False
+
     # -- worker side -------------------------------------------------------
     def _worker_loop(self, w: int) -> None:
         group, t_free = -1, 0.0
@@ -335,6 +524,23 @@ class WorkerPool:
                 # lands before this dequeue is a wall race, and skipping
                 # would fork the group's shared timeline on it.
                 continue
+            if self._status.get(w) == "removed":
+                # immediate removal: the master already posted this run's
+                # failure; serve nothing further
+                continue
+            leave = self._leave_at.get(w)
+            if leave is not None and ctx.group >= leave[0]:
+                # scripted departure (virtual clocks): pieces finishing by
+                # the departure instant still count; the first too-late
+                # piece posts the failure AT that instant — deterministic
+                # because this thread posts serially with monotone t — and
+                # the worker serves nothing further for the run (prog[1]).
+                t_rm = leave[1] if ctx.group == leave[0] else 0.0
+                dur = self._duration(ctx, w, piece)
+                if max(t_free, ctx.start_at, piece.not_before) + dur > t_rm:
+                    prog[1] = True
+                    ctx.post(_Event("failure", ctx.epoch, w, piece.idx, t_rm))
+                    continue
             fail_at = ctx.faults.fails_at(w)
             if fail_at is not None and prog[0] >= fail_at:
                 # die on this piece; detection at the would-be completion
@@ -433,6 +639,8 @@ class WorkerPool:
         delay_model: DelayModel | None = None,
         viable: Callable[[list[int]], bool] | None = None,
         start_at: float = 0.0,
+        workers: Sequence[int] | None = None,
+        extra_pieces: Sequence[tuple] | None = None,
     ) -> RunHandle:
         """Dispatch ``pieces`` immediately and return a :class:`RunHandle`.
 
@@ -442,6 +650,15 @@ class WorkerPool:
         otherwise each submission starts a fresh one.  ``start_at`` gates
         every piece of the run to begin no earlier than that group-relative
         virtual time — the executor's chaining hook for dependent runs.
+
+        ``workers`` restricts the candidate set (intersected with the
+        currently dispatchable members) — fixed-fleet executors pass their
+        membership snapshot so a joiner never absorbs pieces it has no
+        resident partition for.  ``extra_pieces`` is a sequence of
+        ``(fn, worker, not_before)`` rateless extras: piece ids continue
+        after ``len(pieces)``, each pinned to one (alive) worker and gated
+        to start no earlier than ``not_before`` — how late joiners receive
+        fresh LT pieces mid-trace without touching resident partitions.
         """
         faults = fault_plan or self.fault_plan
         delay = (delay_model if delay_model is not None
@@ -452,14 +669,41 @@ class WorkerPool:
                 "times as virtual durations the run would be OS-scheduling "
                 "dependent, defeating the deterministic clock")
         n = len(pieces)
-        owner = self._initial_assignment(n, assignment)
-        thunks = {i: fn for i, fn in enumerate(pieces)}
+        extras = list(extra_pieces or [])
+        thunks: dict[int, Callable[[], Any]] = {
+            i: fn for i, fn in enumerate(pieces)}
         wall0 = time.perf_counter()
         events: queue.Queue[_Event] = queue.Queue()
         with self._submit_lock:
             if self._group_pin == 0 and self._active == 0:
                 self._group += 1  # fresh timeline for an unpinned lone run
                 self._group_t0_wall = self.clock.now()
+            # candidate workers resolve UNDER the lock, against the group
+            # this run actually lands on — membership may have changed
+            # since the caller last looked.
+            cand = self._members_for_group(self._group)
+            if workers is not None:
+                allowed = {int(v) for v in workers}
+                bad = sorted(v for v in allowed
+                             if v < 0 or v >= self.n_workers)
+                if bad:
+                    raise ValueError(f"unknown workers {bad} in workers=")
+                cand = [v for v in cand if v in allowed]
+            if not cand:
+                raise Undecodable(
+                    "no dispatchable workers: every candidate is removed, "
+                    "draining, or outside the requested workers= subset")
+            owner = self._initial_assignment(n, assignment, cand)
+            gates: dict[int, float] = {}
+            for j, (fn, w_x, nb) in enumerate(extras):
+                w_x = int(w_x)
+                if self._status.get(w_x) != "alive":
+                    raise ValueError(
+                        f"extra-piece target {w_x} is not alive "
+                        f"(status={self._status.get(w_x)!r})")
+                owner[n + j] = w_x
+                thunks[n + j] = fn
+                gates[n + j] = float(nb)
             self._epoch += 1
             self._active += 1
             ctx = _RunCtx(self._epoch, self._group, threading.Event(),
@@ -469,21 +713,24 @@ class WorkerPool:
             # is OS-scheduling dependent and is used ONLY for the safe-merge
             # bound and liveness; every decision that shapes the run (decode
             # subset, re-dispatch targets) reads processing-time state,
-            # which the time-ordered merge makes deterministic.
+            # which the time-ordered merge makes deterministic.  Sized at
+            # submit: workers added later are invisible to this run.
             st = _MasterState(owner=owner, thunks=thunks,
                               pending=[set() for _ in range(self.n_workers)],
                               last_t=[0.0] * self.n_workers,
                               proc_t=[0.0] * self.n_workers)
-            for i in range(n):
-                st.pending[owner[i]].add(i)
+            for i, w in owner.items():
+                st.pending[w].add(i)
             for w in range(self.n_workers):
                 for i in sorted(st.pending[w]):
-                    self._inbox[w].put((ctx, Piece(i, thunks[i])))
+                    self._inbox[w].put((ctx, Piece(
+                        i, thunks[i], not_before=gates.get(i, 0.0))))
                     self.dispatch_count += 1
+            self._live[ctx.epoch] = (ctx, st)
         report = RunReport(0.0, 0.0, [], [], [], [], [], dict(owner),
                            t_submit=float(start_at))
-        return RunHandle(self, ctx, st, until, viable, report, n, wall0,
-                         events)
+        return RunHandle(self, ctx, st, until, viable, report,
+                         n + len(extras), wall0, events)
 
     def _collect(self, h: RunHandle) -> tuple[dict[int, Any], RunReport]:
         """Master loop for one submitted run (RunHandle.result)."""
@@ -525,20 +772,25 @@ class WorkerPool:
             ctx.cancel.set()  # abort real-clock stragglers
             with self._submit_lock:
                 self._active -= 1
+                self._live.pop(ctx.epoch, None)
 
-    def _initial_assignment(self, n: int, counts) -> dict[int, int]:
+    def _initial_assignment(self, n: int, counts,
+                            cand: Sequence[int]) -> dict[int, int]:
+        """Piece -> worker over the dispatchable candidates only; counts
+        (hetero.allocate_pieces output) map positionally onto ``cand``."""
         owner: dict[int, int] = {}
         if counts is None:
             for i in range(n):
-                owner[i] = i % self.n_workers
+                owner[i] = cand[i % len(cand)]
             return owner
         counts = [int(c) for c in counts]
-        if len(counts) != self.n_workers or sum(counts) != n or min(counts) < 0:
+        if len(counts) != len(cand) or sum(counts) != n or min(counts) < 0:
             raise ValueError(
-                f"assignment {counts} must have one count >= 0 per worker "
-                f"({self.n_workers}) summing to the piece count ({n})")
+                f"assignment {counts} must have one count >= 0 per "
+                f"dispatchable worker ({len(cand)}) summing to the piece "
+                f"count ({n})")
         i = 0
-        for w, c in enumerate(counts):
+        for w, c in zip(cand, counts):
             for _ in range(c):
                 owner[i] = w
                 i += 1
@@ -588,8 +840,8 @@ class WorkerPool:
         event lands strictly after last_t[w]."""
         return all(
             t <= st.last_t[w]
-            for w in range(self.n_workers)
-            if st.pending[w] and w not in st.dead
+            for w in range(len(st.pending))  # submit-time snapshot, not
+            if st.pending[w] and w not in st.dead  # the (growable) pool
         )
 
     def _on_failure(self, ev, st: _MasterState, viable, report, ctx) -> None:
@@ -606,27 +858,49 @@ class WorkerPool:
         # the receipt race, so the UNION is deterministic even though the
         # two components individually are not.
         obtainable = st.arrived.union(
-            *(st.pending[v] for v in range(self.n_workers)
+            *(st.pending[v] for v in range(len(st.pending))
               if v not in st.dead))
         if viable is not None and viable(sorted(obtainable)):
             return  # redundancy absorbs the failure; lost pieces ignored
         self._redispatch(st, ctx, report)
 
     def _redispatch(self, st: _MasterState, ctx, report) -> None:
-        live = [v for v in range(self.n_workers) if v not in st.dead]
-        if not live:
-            raise RuntimeError(
-                f"pieces {sorted(st.lost)} lost to failures and no live "
-                "workers remain")
-        # deterministic spread: least-loaded live worker first, where load
-        # and tie-breaks read PROCESSED state only (outstanding assigned
-        # pieces, last processed event time) — receipt-order state would
-        # make the target, and with it the whole run, scheduling-dependent
-        load = {v: st.outstanding(v) for v in live}
+        # bounded: each round either lands in the accepting subset or ends
+        # with another worker in st.dead, so more rounds than the run ever
+        # had workers (+ slack for the idle-pool backstop) means the
+        # obtainable set can never satisfy the completion rule.
+        st.redispatch_rounds += 1
+        if st.redispatch_rounds > len(st.pending) + 4:
+            raise Undecodable(
+                f"pieces {sorted(st.lost)} still lost after "
+                f"{st.redispatch_rounds - 1} re-dispatch rounds — the "
+                "obtainable piece set can never decode")
         with self._submit_lock:
+            # live = submit-time snapshot minus dead; joiners (index beyond
+            # the snapshot) hold no resident data for this run and are
+            # reachable only via extra_pieces on a NEW run.  Scripted
+            # leavers/drainers stop accepting at their instant.
+            live = [v for v in range(len(st.pending)) if v not in st.dead]
+            cands: dict[int, list[int]] = {}
             for p in sorted(st.lost):
                 t_detect = st.lost[p]
-                tgt = min(live, key=lambda v: (load[v], st.proc_t[v], v))
+                ok = [v for v in live
+                      if self._accepts_redispatch(v, ctx.group, t_detect)]
+                if not ok:
+                    raise Undecodable(
+                        f"piece {p} lost at t={t_detect:.6g} and no "
+                        "dispatchable worker remains (removed, draining, "
+                        "or departed)")
+                cands[p] = ok
+            # deterministic spread: least-loaded candidate first, where
+            # load and tie-breaks read PROCESSED state only (outstanding
+            # assigned pieces, last processed event time) — receipt-order
+            # state would make the target, and with it the whole run,
+            # scheduling-dependent
+            load = {v: st.outstanding(v) for v in live}
+            for p in sorted(st.lost):
+                t_detect = st.lost[p]
+                tgt = min(cands[p], key=lambda v: (load[v], st.proc_t[v], v))
                 load[tgt] += 1
                 st.pending[tgt].add(p)
                 src = st.owner[p]

@@ -292,15 +292,20 @@ def _matmul(cfg: ModelConfig, x: jax.Array, w: jax.Array) -> jax.Array:
             if ex is not None and not isinstance(x, jax.core.Tracer):
                 assignment = None
                 if hasattr(ex, "plan_matmul"):
-                    # adaptive serving: the executor re-solves k° and the
-                    # per-worker piece allocation from live telemetry
-                    # before every coded GEMM (dist/adaptive.py)
-                    k_new, assignment = ex.plan_matmul(
+                    # adaptive serving: the executor re-solves (n, k°) and
+                    # the per-worker piece allocation from live membership
+                    # + telemetry before every coded GEMM (dist/adaptive.py
+                    # / dist/executor.py); elastic fleets move n with the
+                    # live worker count
+                    n_new, k_new, assignment = ex.plan_matmul(
                         code, cfg.coded_scheme, flat.shape[0],
                         flat.shape[1], w.shape[-1])
-                    if k_new is not None and k_new != code.k:
-                        code = _coded_scheme(cfg.coded_scheme, cfg.coded_n,
-                                             k_new)
+                    if (n_new is not None
+                            or (k_new is not None and k_new != code.k)):
+                        code = _coded_scheme(
+                            cfg.coded_scheme,
+                            n_new if n_new is not None else cfg.coded_n,
+                            k_new if k_new is not None else code.k)
                 y = coded_matmul(flat, w.astype(jnp.float32), code,
                                  executor=ex, assignment=assignment)
             else:

@@ -16,7 +16,11 @@ deadline-driven serving story is judged on:
   scheduler keeps the pool busy (occupancy stays up);
 * **dispatch accounting** — pool pieces and executor runs per step, the
   measured form of the batched-dispatch claim (n pieces per coded GEMM per
-  step, never B·n).
+  step, never B·n);
+* **membership & epochs** (DESIGN.md §12) — the fleet-size timeline, the
+  applied churn/autoscale events, and per-epoch goodput buckets, so an
+  elastic run shows WHERE in the trace a departure cost attainment and
+  how fast the fleet recovered.
 
 All percentiles use numpy's linear interpolation and are pinned by tests
 on deterministic virtual-clock runs.
@@ -29,7 +33,7 @@ import numpy as np
 
 from .scheduler import ServeResult
 
-__all__ = ["percentiles", "summarize"]
+__all__ = ["percentiles", "summarize", "epoch_summary"]
 
 PCTS = (50.0, 95.0, 99.0)
 
@@ -43,13 +47,18 @@ def percentiles(xs: Sequence[float], pcts: Sequence[float] = PCTS) -> dict:
 
 
 def summarize(result: ServeResult, *, deadline_s: float | None = None,
-              ttft_deadline_s: float | None = None) -> dict:
+              ttft_deadline_s: float | None = None,
+              epoch_s: float | None = None) -> dict:
     """One load test -> a JSON-ready SLO report.
 
     ``deadline_s`` is the end-to-end SLO (arrival -> last token) goodput is
     scored against; ``ttft_deadline_s`` optionally scores first-token
     attainment separately.  Omitted deadlines skip those entries rather
-    than inventing a default SLO.
+    than inventing a default SLO.  ``epoch_s`` additionally buckets
+    completions by their done-time into epochs of that width and reports
+    per-epoch goodput/attainment (needs ``deadline_s``) — the evidence an
+    elastic fleet HELD goodput through a churn trace rather than merely
+    averaging over the collapse.
     """
     recs = result.records
     steps = result.steps
@@ -93,4 +102,49 @@ def summarize(result: ServeResult, *, deadline_s: float | None = None,
         busy = [s for s in steps if s.batch > 0]
         out["dispatches_per_step_mean"] = (
             float(np.mean([s.dispatches for s in busy])) if busy else 0.0)
+        alive = [s.alive for s in steps]
+        if any(alive):
+            out["alive_timeline"] = [[float(s.t_start), int(s.alive)]
+                                     for s in steps]
+            out["alive_workers"] = {"min": int(min(alive)),
+                                    "max": int(max(alive)),
+                                    "mean": float(np.mean(alive))}
+    membership = getattr(result, "membership", None)
+    if membership:
+        out["membership"] = [[float(t), str(a), int(w)]
+                             for (t, a, w) in membership]
+    if epoch_s is not None and deadline_s is not None and recs:
+        out["epochs"] = epoch_summary(result, deadline_s=deadline_s,
+                                      epoch_s=epoch_s)
+    return out
+
+
+def epoch_summary(result: ServeResult, *, deadline_s: float,
+                  epoch_s: float) -> list[dict]:
+    """Per-epoch goodput: completions bucketed by done-time.
+
+    Each epoch reports the requests that FINISHED inside it, how many met
+    the e2e deadline, and the resulting goodput — the time-resolved view
+    ``summarize``'s whole-run goodput averages away.  Epochs run from 0 to
+    ``result.t_end`` in ``epoch_s`` strides; empty epochs are kept (zero
+    goodput during a stall is the finding, not noise).
+    """
+    if epoch_s <= 0:
+        raise ValueError(f"need epoch_s > 0, got {epoch_s}")
+    n_epochs = max(1, int(np.ceil(result.t_end / epoch_s)))
+    buckets: list[list] = [[] for _ in range(n_epochs)]
+    for r in result.records:
+        e = min(int(r.done_s / epoch_s), n_epochs - 1)
+        buckets[e].append(r)
+    out = []
+    for e, rs in enumerate(buckets):
+        met = sum(1 for r in rs if r.e2e_s <= deadline_s)
+        out.append({
+            "t0": e * epoch_s,
+            "t1": min((e + 1) * epoch_s, result.t_end),
+            "completed": len(rs),
+            "met": met,
+            "goodput_rps": met / epoch_s,
+            "attainment": met / len(rs) if rs else None,
+        })
     return out

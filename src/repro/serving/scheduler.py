@@ -38,7 +38,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from ..dist.faults import StragglerDrift
+from ..dist.faults import ChurnSchedule, StragglerDrift
 from .engine import Completion, Engine, Request, cache_cat, cache_take
 
 __all__ = ["RequestRecord", "StepRecord", "ServeResult", "ServingScheduler"]
@@ -103,6 +103,10 @@ class StepRecord:
     #                         serial_s - booked piece service time
     prefill_span_s: float = 0.0  # pool time attributed to prefill calls
     decode_span_s: float = 0.0   # pool time attributed to the decode call
+    # -- membership telemetry (DESIGN.md §12): the fleet as the step saw it
+    alive: int = 0    # alive workers after this step's churn + autoscaling
+    joined: int = 0   # workers added this step (scripted churn + autoscaler)
+    left: int = 0     # workers removed or drained this step
 
 
 @dataclasses.dataclass
@@ -113,6 +117,9 @@ class ServeResult:
     steps: list[StepRecord]
     completions: list[Completion]  # Engine-compatible view (latency from arrival)
     t_end: float
+    # membership timeline: (t, action, worker) for every applied fleet
+    # change — scripted churn and autoscaler decisions alike
+    membership: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -162,7 +169,9 @@ class ServingScheduler:
                  policy: str = "fcfs", eos_id: int | None = None,
                  master_call_s: float = 0.0,
                  fault_drift: StragglerDrift | None = None,
-                 delay_seed_stride: int = 0, overlap: bool = False):
+                 delay_seed_stride: int = 0, overlap: bool = False,
+                 churn: "ChurnSchedule | None" = None,
+                 autoscaler=None):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
         if max_batch < 1:
@@ -177,7 +186,18 @@ class ServingScheduler:
         self.master_call_s = float(master_call_s)
         self.fault_drift = fault_drift
         self.delay_seed_stride = int(delay_seed_stride)
+        # elastic serving (DESIGN.md §12): ``churn`` scripts membership on
+        # the serving timeline — events with t <= the step's start are
+        # applied at the step boundary, while the pool is idle, so the
+        # whole run stays a pure function of its seeds; ``autoscaler`` (a
+        # dist.Autoscaler) additionally sizes the fleet from each step's
+        # queue depth.  Both need the engine to run on a pool.
+        self.churn = churn
+        self.autoscaler = autoscaler
         ex = engine.executor
+        if ex is None and (churn is not None or autoscaler is not None):
+            raise ValueError("churn/autoscaler need an executor-backed "
+                             "engine (there is no fleet to change)")
         self.overlap = bool(overlap) and ex is not None
         self._virtual = (ex is not None
                          and getattr(ex.pool.clock, "virtual", False))
@@ -294,6 +314,9 @@ class ServingScheduler:
 
     def _serve_loop(self, queue, lanes, cache, t, step, records, steps,
                     completions, step_reports) -> ServeResult:
+        membership: list = []
+        churn_idx = 0
+        ex = self.engine.executor
         with self.engine.executor_ctx():
             while queue or lanes:
                 if not lanes and queue and queue[0].arrival_s > t:
@@ -314,6 +337,10 @@ class ServingScheduler:
                 queue = [q for q in queue
                          if not any(q is r for r in admit)]
                 qdepth = n_ready - len(admit)
+                # -- elastic membership: scripted churn, then autoscaling,
+                #    applied at the step boundary while the pool is idle
+                churn_idx, joined, left = self._apply_membership(
+                    churn_idx, t_start, qdepth, membership)
                 if self.overlap and (admit or lanes):
                     (lanes, cache, retired, n_decoded, pf_d, pf_r,
                      i_pf, i_dec, t) = self._overlap_step(
@@ -393,12 +420,53 @@ class ServingScheduler:
                         grouped=self.overlap)[0],
                     decode_span_s=self._pool_spans(
                         step_reports[i_dec[0]:i_dec[1]],
-                        grouped=self.overlap)[0]))
+                        grouped=self.overlap)[0],
+                    alive=(len(ex.pool.alive_workers())
+                           if ex is not None else 0),
+                    joined=joined, left=left))
                 step += 1
         completions.sort(key=lambda c: c.rid)
         records.sort(key=lambda r: r.rid)
         return ServeResult(records=records, steps=steps,
-                           completions=completions, t_end=t)
+                           completions=completions, t_end=t,
+                           membership=membership)
+
+    def _apply_membership(self, idx: int, t: float, qdepth: int,
+                          membership: list) -> tuple:
+        """Apply every scripted churn event due by ``t``, then let the
+        autoscaler react to the queue depth.  Returns (next churn index,
+        workers joined, workers removed/drained) for the StepRecord.
+        Stale events (a worker the autoscaler already drained, say) are
+        skipped — the timeline records what actually happened."""
+        ex = self.engine.executor
+        joined = left = 0
+        if self.churn is not None:
+            evs = self.churn.events
+            while idx < len(evs) and evs[idx].t <= t:
+                e = evs[idx]
+                idx += 1
+                try:
+                    if e.action == "join":
+                        w = ex.pool.add_worker()
+                        joined += 1
+                    elif e.action == "remove":
+                        ex.pool.remove_worker(e.worker)
+                        w, left = e.worker, left + 1
+                    else:
+                        ex.pool.drain(e.worker)
+                        w, left = e.worker, left + 1
+                except (KeyError, ValueError):
+                    continue
+                membership.append((t, e.action, w))
+        if self.autoscaler is not None:
+            dec = self.autoscaler.step(qdepth, t)
+            for w in dec.joined:
+                membership.append((t, "join", w))
+            for w in dec.drained:
+                membership.append((t, "drain", w))
+            joined += len(dec.joined)
+            left += len(dec.drained)
+        return idx, joined, left
 
     def _overlap_step(self, lanes, cache, admit, t_start, records,
                       completions, step_reports):

@@ -1,0 +1,699 @@
+"""Elastic worker pools under churn (ISSUE 7 tentpole; DESIGN.md §12).
+
+The churn-invariant harness: for ANY scripted membership trace that keeps
+the obtainable piece set decodable, every registered scheme still decodes
+to the uncoded reference exactly — joins hand rateless schemes fresh
+pieces, departures fail through the re-dispatch path, drains lose nothing.
+Below decodability the run terminates with the typed ``Undecodable``, never
+a hang or garbage.  Two cells of the fault matrix are pinned to
+hand-computed virtual timelines (PR-2 style: ``t_complete`` equals the
+k-th finish exactly); a full serving run under churn + autoscaling is
+asserted to be a pure function of its seeds, overlap mode included.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.schemes import LTScheme, get_scheme, scheme_names
+from repro.dist import (
+    Autoscaler,
+    ChurnEvent,
+    ChurnSchedule,
+    CodedExecutor,
+    AdaptiveExecutor,
+    CostModel,
+    DeterministicDelay,
+    FakeClock,
+    FaultPlan,
+    RealClock,
+    Undecodable,
+    WorkerPool,
+)
+from repro.models.model import ModelConfig
+from repro.serving import (Engine, Request, ServingScheduler)
+
+PIECE = 1.0  # uniform virtual piece duration for every pool here
+F = 6        # columns per source row in the decode-exactness checks
+
+
+def _executor(n_workers, **kw):
+    kw.setdefault("clock", FakeClock())
+    kw.setdefault("delay_model", DeterministicDelay(PIECE))
+    return CodedExecutor(n_workers, **kw)
+
+
+def _make_scheme(name, n=4):
+    """n=4 instance of a registered scheme with one piece of slack where
+    the scheme allows it (mds/lt k=3); structural schemes pick their own k
+    (replication k=2, uncoded k=4)."""
+    cls = get_scheme(name)
+    if name in ("mds", "lt"):
+        return cls.make(n, 3)
+    return cls.make(n)
+
+
+def _sources(code, seed=3):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(code.k, F)), jnp.float32)
+
+
+def _piece_fns(code, src):
+    """Piece i returns coded row i — the identity linear op, so the decode
+    must reproduce the sources exactly under every scheme."""
+    coded = code.encode(src)
+    return [lambda i=i: coded[i] for i in range(code.n)]
+
+
+def _fresh_piece(src):
+    """Rateless extras: coded row ``idx`` of the extended scheme."""
+    return lambda ext, idx: (
+        lambda: jnp.asarray(ext.rows[idx], jnp.float32) @ src)
+
+
+def _assert_decodes(handle, src):
+    np.testing.assert_allclose(np.asarray(handle.result()), np.asarray(src),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ChurnSchedule: pure-data membership scripts
+# ---------------------------------------------------------------------------
+
+class TestChurnSchedule:
+    def test_event_validation(self):
+        with pytest.raises(ValueError, match="action"):
+            ChurnEvent(1.0, "explode", 0)
+        with pytest.raises(ValueError, match="t >= 0"):
+            ChurnEvent(-0.5, "remove", 0)
+        with pytest.raises(ValueError, match="no worker"):
+            ChurnEvent(1.0, "join", 2)
+        with pytest.raises(ValueError, match="needs a worker"):
+            ChurnEvent(1.0, "remove")
+
+    def test_events_must_be_time_ordered(self):
+        with pytest.raises(ValueError, match="time-ordered"):
+            ChurnSchedule((ChurnEvent(2.0, "join"), ChurnEvent(1.0, "join")))
+
+    def test_add_merges_sorted(self):
+        a = ChurnSchedule((ChurnEvent(1.0, "remove", 0),))
+        b = ChurnSchedule((ChurnEvent(0.5, "join"), ChurnEvent(2.0, "drain", 1)))
+        merged = a + b
+        assert [e.t for e in merged.events] == [0.5, 1.0, 2.0]
+
+    def test_until_cuts_at_t(self):
+        s = ChurnSchedule((ChurnEvent(0.5, "join"), ChurnEvent(1.5, "join")))
+        assert len(s.until(1.0)) == 1 and len(s.until(2.0)) == 2
+
+    def test_flash_crowd(self):
+        s = ChurnSchedule.flash_crowd(2.0, 3)
+        assert len(s.events) == 3
+        assert all(e.action == "join" and e.t == 2.0 for e in s.events)
+
+    def test_rolling_restart_and_departures(self):
+        s = ChurnSchedule.rolling_restart([0, 1], 1.0, down_s=0.5,
+                                          stagger_s=2.0)
+        kinds = [(e.t, e.action) for e in s.events]
+        assert kinds == [(1.0, "remove"), (1.5, "join"),
+                         (3.0, "remove"), (3.5, "join")]
+        d = ChurnSchedule.departures([2, 0], [4.0, 1.0])
+        assert [(e.t, e.worker) for e in d.events] == [(1.0, 0), (4.0, 2)]
+        with pytest.raises(ValueError, match="one departure time"):
+            ChurnSchedule.departures([0, 1], [1.0])
+
+
+# ---------------------------------------------------------------------------
+# pool membership: add / drain / remove semantics
+# ---------------------------------------------------------------------------
+
+class TestPoolMembership:
+    def test_add_worker_ids_grow_and_log(self):
+        with _executor(2) as ex:
+            pool = ex.pool
+            assert pool.add_worker() == 2
+            assert pool.add_worker() == 3
+            assert pool.alive_workers() == [0, 1, 2, 3]
+            assert pool.worker_status(3) == "alive"
+            assert ("join", 2) in pool.membership_log
+
+    def test_unknown_worker_raises_keyerror(self):
+        with _executor(2) as ex:
+            pool = ex.pool
+            with pytest.raises(KeyError):
+                pool.worker_status(9)
+            with pytest.raises(KeyError):
+                pool.drain(9)
+            with pytest.raises(KeyError):
+                pool.remove_worker(9)
+
+    def test_drain_and_remove_state_errors(self):
+        with _executor(3) as ex:
+            pool = ex.pool
+            pool.drain(0)
+            with pytest.raises(ValueError, match="not alive"):
+                pool.drain(0)  # already draining
+            pool.remove_worker(1)
+            with pytest.raises(ValueError, match="already removed"):
+                pool.remove_worker(1)
+            # removing a draining lame duck is a legal escalation
+            pool.remove_worker(0)
+            assert pool.worker_status(0) == "removed"
+
+    def test_scripted_events_need_virtual_clock(self):
+        with WorkerPool(2, clock=RealClock()) as pool:
+            with pytest.raises(ValueError, match="virtual"):
+                pool.remove_worker(0, at=1.0)
+            with pytest.raises(ValueError, match="virtual"):
+                pool.drain(0, at=1.0)
+
+    def test_virtual_midrun_immediate_remove_rejected(self):
+        with _executor(2) as ex:
+            code = get_scheme("mds").make(2, 1)
+            src = _sources(code)
+            h = ex.run_async(code, _piece_fns(code, src))
+            with pytest.raises(ValueError, match="script it"):
+                ex.pool.remove_worker(0)
+            _assert_decodes(h, src)
+
+    def test_idle_virtual_immediate_remove(self):
+        with _executor(3) as ex:
+            ex.pool.remove_worker(2)
+            assert ex.pool.worker_status(2) == "removed"
+            assert ex.pool.alive_workers() == [0, 1]
+
+    def test_no_dispatchable_workers_is_undecodable(self):
+        with _executor(2) as ex:
+            pool = ex.pool
+            pool.drain(0)
+            pool.drain(1)
+            code = get_scheme("mds").make(2, 1)
+            with pytest.raises(Undecodable, match="no dispatchable"):
+                ex.run_async(code, _piece_fns(code, _sources(code)))
+
+    def test_dispatch_preview_and_restrict(self):
+        with _executor(4) as ex:
+            pool = ex.pool
+            pool.remove_worker(3)
+            assert pool.dispatch_preview() == [0, 1, 2]
+            assert pool.dispatch_preview(restrict=[1, 3]) == [1]
+            w = pool.add_worker()
+            assert w in pool.dispatch_preview()
+
+    def test_drained_worker_finishes_queued_pieces(self):
+        # drain scripted mid-run: nothing is lost, no failure fires, and the
+        # drained worker's pieces still land
+        with _executor(2) as ex:
+            code = get_scheme("uncoded").make(4)
+            src = _sources(code)
+            ex.pool.drain(1, at=0.5)
+            h = ex.run_async(code, _piece_fns(code, src))
+            _assert_decodes(h, src)
+            assert h.report.failures == []
+            assert {h.report.assignment[p] for p in (1, 3)} == {1}
+
+
+# ---------------------------------------------------------------------------
+# fault matrix: every registered scheme x every churn cell
+# ---------------------------------------------------------------------------
+
+CELLS = ("dead_at_dispatch", "removed_mid_compute", "drain_during_run",
+         "join_mid_run")
+
+
+class TestFaultMatrix:
+    def test_matrix_covers_registry(self):
+        # the matrix parametrizes over scheme_names() itself, so a newly
+        # registered scheme is covered automatically; pin the floor here
+        assert {"lt", "mds", "replication", "uncoded"} <= set(scheme_names())
+
+    @pytest.mark.parametrize("cell", CELLS)
+    @pytest.mark.parametrize("name", scheme_names())
+    def test_decodes_to_reference(self, name, cell):
+        code = _make_scheme(name)
+        src = _sources(code)
+        fns = _piece_fns(code, src)
+        kw = {}
+        churn = None
+        if cell == "dead_at_dispatch":
+            kw["fault_plan"] = FaultPlan(dead=frozenset({3}))
+        elif cell == "join_mid_run":
+            churn = ChurnSchedule.flash_crowd(0.5, 1)
+        with _executor(4) as ex:
+            if cell == "removed_mid_compute":
+                ex.pool.remove_worker(3, at=0.5)
+            elif cell == "drain_during_run":
+                ex.pool.drain(3, at=0.5)
+            if churn is not None:
+                h = ex.run_elastic(code, fns, churn=churn,
+                                   fresh_piece=_fresh_piece(src))
+                if getattr(code, "rateless", False):
+                    # the joiner received a fresh extended-scheme piece;
+                    # resident pieces kept their original owners
+                    assert h.report.assignment[code.n] == 4
+                else:
+                    # fixed-n scheme: the joiner idles (no resident partition)
+                    assert 4 not in h.report.assignment.values()
+            else:
+                h = ex.run_async(code, fns, **kw)
+            _assert_decodes(h, src)
+            if cell == "drain_during_run":
+                assert h.report.failures == []
+            elif cell == "removed_mid_compute":
+                # scripted at 0.5, strictly before any arrival (t=1.0): the
+                # failure is always processed
+                assert [w for w, _ in h.report.failures] == [3]
+            elif cell == "dead_at_dispatch":
+                # detection lands at the would-be completion (t=1.0), the
+                # same instant the healthy pieces arrive — schemes that
+                # accept at k < 4 arrivals finish before the failure is
+                # ever processed, so it may legitimately be absent
+                assert all(w == 3 for w, _ in h.report.failures)
+
+    def test_pin_mds_removal_timeline(self):
+        """Hand-computed cell: MDS(4,3) on 2 workers, w1 removed at t=1.5.
+
+        Round-robin puts p0,p2 on w0 and p1,p3 on w1; every piece takes
+        1.0.  w1 finishes p1 at 1.0 (<= 1.5, still counts) and would finish
+        p3 at 2.0 > 1.5, so p3 is lost with the failure AT 1.5.  The
+        obtainable set {0,1,2} is exactly k=3 and decodable, so redundancy
+        absorbs the loss with NO re-dispatch, and the run completes at the
+        k-th arrival: p2 on w0 at t = 2.0 exactly.
+        """
+        code = get_scheme("mds").make(4, 3)
+        src = _sources(code)
+        with _executor(2) as ex:
+            ex.pool.remove_worker(1, at=1.5)
+            h = ex.run_async(code, _piece_fns(code, src))
+            _assert_decodes(h, src)
+            r = h.report
+        assert r.t_complete == 2.0            # == the k-th finish, exactly
+        assert r.subset == [0, 1, 2]
+        assert r.failures == [(1, 1.5)]
+        assert r.redispatched == []
+
+    def test_pin_lt_join_timeline(self):
+        """Hand-computed cell: LT(2,2) on 2 workers; a joiner at t=0 takes
+        a fresh extended row, w1 departs at t=0.2 before its piece lands.
+
+        seed=1 gives rows [[1,1],[0,1]] and extension row [0,1]: rows
+        {0,2} are independent (asserted inline), so when p1 is lost at 0.2
+        the obtainable set {0,2} already decodes — the joiner's fresh
+        piece SUBSTITUTES for the departed resident with no re-dispatch.
+        p0 (w0) and p2 (w2, gated at the join instant 0.0) both finish at
+        1.0, the rank-2 prefix [0,2] accepts, t_complete == 1.0 exactly.
+        """
+        code = LTScheme(2, 2, seed=1)
+        ext = code.extend(1)
+        assert np.linalg.matrix_rank(code.rows) == 2
+        assert np.linalg.matrix_rank(ext.rows[[0, 2]]) == 2  # join can absorb
+        src = _sources(code)
+        churn = ChurnSchedule((ChurnEvent(0.0, "join"),
+                               ChurnEvent(0.2, "remove", 1)))
+        with _executor(2) as ex:
+            h = ex.run_elastic(code, _piece_fns(code, src), churn=churn,
+                               fresh_piece=_fresh_piece(src))
+            _assert_decodes(h, src)
+            r = h.report
+        assert r.t_complete == 1.0            # == the k-th finish, exactly
+        assert r.subset == [0, 2]             # resident + joiner, not p1
+        assert r.failures == [(1, 0.2)]
+        assert r.redispatched == []
+        assert r.assignment == {0: 0, 1: 1, 2: 2}
+
+
+# ---------------------------------------------------------------------------
+# re-dispatch regressions: races, termination
+# ---------------------------------------------------------------------------
+
+class TestRedispatchRegressions:
+    def test_join_mid_run_does_not_break_redispatch(self):
+        # the joiner lands between submit and collect while a failure is
+        # re-dispatching — master bookkeeping is a submit-time snapshot, so
+        # the grown pool must neither IndexError nor leak pieces onto the
+        # joiner (it holds no residents for this run)
+        code = get_scheme("uncoded").make(2)
+        src = _sources(code)
+        with _executor(2) as ex:
+            h = ex.run_async(code, _piece_fns(code, src),
+                             fault_plan=FaultPlan(dead=frozenset({1})))
+            joiner = ex.pool.add_worker()
+            _assert_decodes(h, src)
+            assert joiner not in h.report.assignment.values()
+            assert h.report.redispatched == [(1, 1, 0)]
+
+    def test_pin_removed_between_dispatch_and_arrival(self):
+        """w1 departs at 0.5, before its piece (due 1.0) arrives: the loss
+        is detected AT 0.5, and uncoded (no redundancy) re-dispatches p1 to
+        w0 gated at the detection instant — it starts when w0 frees at 1.0
+        and lands at 2.0, the exact completion time."""
+        code = get_scheme("uncoded").make(2)
+        src = _sources(code)
+        with _executor(2) as ex:
+            ex.pool.remove_worker(1, at=0.5)
+            h = ex.run_async(code, _piece_fns(code, src))
+            _assert_decodes(h, src)
+            r = h.report
+        assert r.failures == [(1, 0.5)]
+        assert r.redispatched == [(1, 1, 0)]
+        assert r.t_complete == 2.0
+        assert r.assignment == {0: 0, 1: 0}
+
+    def test_total_loss_terminates_with_undecodable(self):
+        # every worker departs before anything completes: the run must
+        # raise the typed error, not hang on events that will never come
+        code = get_scheme("mds").make(2, 1)
+        src = _sources(code)
+        with _executor(2, timeout_s=30.0) as ex:
+            ex.pool.remove_worker(0, at=0.3)
+            ex.pool.remove_worker(1, at=0.4)
+            h = ex.run_async(code, _piece_fns(code, src))
+            with pytest.raises(Undecodable, match="no dispatchable worker"):
+                h.result()
+
+    def test_redispatch_round_bound(self):
+        # white-box: the round counter bounds the loop even if a buggy /
+        # lying viable() keeps a never-decodable run alive
+        code = get_scheme("uncoded").make(2)
+        src = _sources(code)
+        coded = code.encode(src)
+        with _executor(2) as ex:
+            h = ex.pool.run_async(
+                [lambda i=i: coded[i] for i in range(2)],
+                until=lambda order: list(order) if len(order) >= 2 else None,
+                fault_plan=FaultPlan(dead=frozenset({1})))
+            h._st.redispatch_rounds = 99
+            with pytest.raises(Undecodable, match="re-dispatch rounds"):
+                h.result()
+
+
+# ---------------------------------------------------------------------------
+# LT is elasticity-native: rateless extension
+# ---------------------------------------------------------------------------
+
+class TestElasticLT:
+    def test_extend_keeps_prefix_rows_identical(self):
+        base = get_scheme("lt").make(4, 3)
+        ext = base.extend(2)
+        assert (ext.n, ext.k, ext.seed) == (6, 3, base.seed)
+        np.testing.assert_array_equal(ext.rows[:4], base.rows)
+
+    def test_extend_zero_is_self_negative_raises(self):
+        base = get_scheme("lt").make(4, 3)
+        assert base.extend(0) is base
+        with pytest.raises(ValueError, match="extra >= 0"):
+            base.extend(-1)
+
+    def test_extended_rows_decode_with_prefix_pieces(self):
+        # a subset mixing resident rows with a minted row decodes exactly
+        base = get_scheme("lt").make(4, 3)
+        ext = base.extend(1)
+        src = _sources(base)
+        coded = jnp.asarray(ext.rows, jnp.float32) @ src
+        subset = next(s for s in ([0, 1, 4], [0, 2, 4], [1, 2, 4],
+                                  [0, 1, 2, 4], [0, 1, 3, 4], [0, 1, 2, 3, 4])
+                      if np.linalg.matrix_rank(ext.rows[s]) >= 3)
+        out = ext.decode_from(subset, coded[jnp.asarray(subset)])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(src),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_run_elastic_validates_piece_count(self):
+        code = get_scheme("lt").make(4, 3)
+        with _executor(4) as ex:
+            with pytest.raises(ValueError, match="scheme.n"):
+                ex.run_elastic(code, [lambda: 0] * 3,
+                               churn=ChurnSchedule())
+
+    def test_run_elastic_joiners_get_extras_per_join(self):
+        code = get_scheme("lt").make(4, 3)
+        src = _sources(code)
+        churn = ChurnSchedule.flash_crowd(0.25, 2)
+        with _executor(4) as ex:
+            h = ex.run_elastic(code, _piece_fns(code, src), churn=churn,
+                               fresh_piece=_fresh_piece(src),
+                               pieces_per_join=2)
+            _assert_decodes(h, src)
+            assign = h.report.assignment
+        # 2 joiners x 2 fresh pieces each, ids continuing past scheme.n,
+        # pinned to the joiners; residents keep pieces 0..n-1
+        assert [assign[code.n + j] for j in range(4)] == [4, 4, 5, 5]
+        assert all(assign[p] < 4 for p in range(code.n))
+
+
+# ---------------------------------------------------------------------------
+# re-planning on membership change
+# ---------------------------------------------------------------------------
+
+class TestReplanOnMembership:
+    def _adaptive(self, n=4, elastic=True):
+        return AdaptiveExecutor(n, clock=FakeClock(),
+                                delay_model=DeterministicDelay(PIECE),
+                                elastic=elastic)
+
+    def test_mds_replans_n_and_k_on_departure(self):
+        code = get_scheme("mds").make(4, 2)
+        with self._adaptive() as ex:
+            ex.pool.remove_worker(3)
+            n_new, k_new, _ = ex.plan_matmul(code, "mds", 32, 16, 16)
+        assert n_new == 3
+        assert isinstance(k_new, int) and 1 <= k_new <= 3
+
+    def test_elastic_join_grows_n(self):
+        code = get_scheme("mds").make(4, 2)
+        with self._adaptive() as ex:
+            ex.pool.add_worker()
+            ex.pool.add_worker()
+            n_new, k_new, _ = ex.plan_matmul(code, "mds", 32, 16, 16)
+        assert n_new == 6
+
+    def test_rateless_keeps_k(self):
+        code = get_scheme("lt").make(4, 3)
+        with self._adaptive() as ex:
+            ex.pool.remove_worker(3)
+            assert ex.plan_matmul(code, "lt", 32, 16, 16) == (3, None, None)
+
+    def test_structural_scheme_resolves_redundancy_policy(self):
+        code = get_scheme("replication").make(4)  # k = 2
+        with self._adaptive() as ex:
+            ex.pool.remove_worker(3)
+            n_new, k_new, _ = ex.plan_matmul(code, "replication", 32, 16, 16)
+        assert (n_new, k_new) == (3, 1)  # floor(3/2)
+
+    def test_fixed_fleet_never_replans_or_follows_joiners(self):
+        code = get_scheme("mds").make(4, 2)
+        with self._adaptive(elastic=False) as ex:
+            ex.pool.add_worker()
+            n_new, _, _ = ex.plan_matmul(code, "mds", 32, 16, 16)
+            assert n_new is None
+        with _executor(4) as ex2:  # base executor, same contract
+            ex2.pool.remove_worker(3)
+            assert ex2.plan_matmul(code, "mds", 32, 16, 16) == (None, None,
+                                                               None)
+
+    def test_fleet_below_k_keeps_n(self):
+        # fewer members than k cannot decode at a smaller n — the scheme
+        # keeps its shape and survives on re-dispatch instead
+        code = get_scheme("mds").make(4, 3)
+        with _executor(4, elastic=True) as ex:
+            ex.pool.remove_worker(2)
+            ex.pool.remove_worker(3)
+            assert ex.plan_matmul(code, "mds", 32, 16, 16) == (None, None,
+                                                               None)
+
+
+# ---------------------------------------------------------------------------
+# autoscaler
+# ---------------------------------------------------------------------------
+
+class TestAutoscaler:
+    def _pool(self, n=2):
+        return WorkerPool(n, clock=FakeClock(),
+                          delay_model=DeterministicDelay(PIECE))
+
+    def test_validation(self):
+        with self._pool() as pool:
+            with pytest.raises(ValueError, match="min_workers"):
+                Autoscaler(pool, min_workers=4, max_workers=2)
+            with pytest.raises(ValueError, match="alpha"):
+                Autoscaler(pool, alpha=0.0)
+        with pytest.raises(ValueError, match="positive"):
+            CostModel(worker_cost=0.0)
+
+    def test_scales_up_on_backlog(self):
+        with self._pool(2) as pool:
+            auto = Autoscaler(pool, target_queue=1.0, max_workers=8)
+            dec = auto.step(6, t=0.0)  # q_hat = 3.0, backlog 2 -> +2 workers
+        assert dec.joined == (2, 3) and dec.drained == ()
+        assert dec.n_alive == 4 and dec.reason.startswith("backlog")
+        assert auto.decisions == [dec]
+
+    def test_cooldown_separates_actions(self):
+        with self._pool(2) as pool:
+            auto = Autoscaler(pool, target_queue=1.0, cooldown_steps=2)
+            assert auto.step(6, t=0.0).joined != ()
+            held = auto.step(8, t=1.0)  # still backlogged, but cooling down
+            assert held.joined == () and held.reason == "hold"
+
+    def test_cost_model_gates_scale_up(self):
+        # a cheap-queue cost model tolerates the same backlog a default
+        # (latency-sensitive) model would scale for
+        with self._pool(2) as pool:
+            auto = Autoscaler(pool, target_queue=1.0,
+                              cost=CostModel(worker_cost=100.0,
+                                             queue_cost=0.1))
+            assert auto.step(6, t=0.0).joined == ()
+
+    def test_drains_slowest_when_idle(self):
+        speeds = {0: 1.0, 1: 0.2, 2: 1.0}
+        with self._pool(3) as pool:
+            auto = Autoscaler(pool, min_workers=1, cooldown_steps=0,
+                              speeds_fn=lambda n: [speeds[w]
+                                                   for w in range(n)])
+            dec = auto.step(0, t=0.0)
+            assert dec.drained == (1,)  # the fitted straggler, not max id
+            assert pool.worker_status(1) == "draining"
+
+    def test_drains_highest_id_without_speeds_and_respects_min(self):
+        with self._pool(2) as pool:
+            auto = Autoscaler(pool, min_workers=1, cooldown_steps=0)
+            assert auto.step(0, t=0.0).drained == (1,)
+            # fleet is at min_workers now: no further drain
+            assert auto.step(0, t=1.0).drained == ()
+
+    def test_recommend_redundancy(self):
+        with self._pool() as pool:
+            auto = Autoscaler(pool)
+            assert auto.recommend_redundancy([]) == 1
+            assert auto.recommend_redundancy([1.0, 1.0]) == 1
+            assert auto.recommend_redundancy([1.0, 1.0, 1.0, 0.2]) == 2
+
+
+# ---------------------------------------------------------------------------
+# serving under churn: determinism + membership telemetry
+# ---------------------------------------------------------------------------
+
+def _serve_cfg():
+    return ModelConfig(name="elastic-t", n_layers=1, d_model=16, n_heads=2,
+                       n_kv_heads=2, d_ff=32, vocab=32, gated=False,
+                       dtype=jnp.float32, coded_n=4, coded_k=3,
+                       coded_scheme="lt")
+
+
+def _reqs(n=5, vocab=32):
+    out = []
+    for i in range(n):
+        prompt = (np.arange(4, dtype=np.int32) + 3 * i) % vocab
+        out.append(Request(i, prompt.astype(np.int32), max_new=2,
+                           arrival_s=2.0 * i))
+    return out
+
+
+def _serve_once(overlap, with_autoscaler=True):
+    ex = CodedExecutor(4, clock=FakeClock(),
+                       delay_model=DeterministicDelay([1.0, 1.1, 1.2, 1.3]),
+                       timeout_s=30.0, elastic=True)
+    churn = ChurnSchedule((ChurnEvent(2.0, "remove", 3),
+                           ChurnEvent(3.0, "join")))
+    auto = (Autoscaler(ex.pool, min_workers=2, max_workers=6,
+                       target_queue=1.0) if with_autoscaler else None)
+    eng = Engine(_serve_cfg(), seed=0, executor=ex)
+    sched = ServingScheduler(eng, max_seq=16, max_batch=4,
+                             master_call_s=1e-3, overlap=overlap,
+                             churn=churn, autoscaler=auto)
+    try:
+        res = sched.serve(_reqs())
+    finally:
+        ex.close()
+    steps = [dataclasses.astuple(s) for s in res.steps]
+    tokens = {c.rid: c.tokens.tolist() for c in res.completions}
+    return steps, tokens, list(res.membership)
+
+
+class TestServingChurn:
+    def test_churn_needs_executor(self):
+        eng = Engine(_serve_cfg(), seed=0)  # no pool behind it
+        with pytest.raises(ValueError, match="executor"):
+            ServingScheduler(eng, max_seq=16, churn=ChurnSchedule())
+        with pytest.raises(ValueError, match="executor"):
+            ServingScheduler(eng, max_seq=16, autoscaler=object())
+
+    def test_serial_run_is_pure_function_of_seeds(self):
+        a = _serve_once(overlap=False)
+        b = _serve_once(overlap=False)
+        assert a[0] == b[0]   # identical StepRecord streams
+        assert a[1] == b[1]   # identical token values
+        assert a[2] == b[2]   # identical membership timelines
+
+    def test_overlap_run_is_pure_function_of_seeds(self):
+        a = _serve_once(overlap=True)
+        b = _serve_once(overlap=True)
+        assert a[0] == b[0]
+        assert a[1] == b[1]
+        assert a[2] == b[2]
+
+    def test_membership_timeline_recorded(self):
+        steps, tokens, membership = _serve_once(overlap=False,
+                                                with_autoscaler=False)
+        assert len(tokens) == 5
+        actions = [(a, w) for (_, a, w) in membership]
+        assert ("remove", 3) in actions and ("join", 4) in actions
+        # StepRecord.alive tracks the fleet through the departure
+        alive = [s[-3] for s in steps]   # StepRecord.alive field
+        assert max(alive) == 4 and min(alive) == 3
+
+
+# ---------------------------------------------------------------------------
+# churn-invariant properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_property_churn_invariant_decode(data):
+    """Any scripted churn trace that keeps at least one resident alive (so
+    re-dispatch always has a target) decodes every registered scheme to
+    the uncoded reference exactly — removals before OR after piece
+    completion, joins feeding rateless extras included."""
+    name = data.draw(st.sampled_from(scheme_names()))
+    n_remove = data.draw(st.integers(min_value=0, max_value=2))
+    removed = data.draw(st.permutations([1, 2, 3]))[:n_remove]
+    evs = []
+    for w in removed:
+        t = data.draw(st.floats(min_value=0.1, max_value=3.0,
+                                allow_nan=False, allow_infinity=False))
+        evs.append(ChurnEvent(round(t, 3), "remove", w))
+    for _ in range(data.draw(st.integers(min_value=0, max_value=2))):
+        t = data.draw(st.floats(min_value=0.0, max_value=2.0,
+                                allow_nan=False, allow_infinity=False))
+        evs.append(ChurnEvent(round(t, 3), "join"))
+    evs.sort(key=lambda e: (e.t, e.action, e.worker or -1))
+    churn = ChurnSchedule(tuple(evs))
+    code = get_scheme(name).make(4)
+    src = _sources(code)
+    with _executor(4, timeout_s=30.0) as ex:
+        h = ex.run_elastic(code, _piece_fns(code, src), churn=churn,
+                           fresh_piece=_fresh_piece(src))
+        _assert_decodes(h, src)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_property_total_loss_raises_undecodable(data):
+    """Every worker departing before any piece can land (pieces take 1.0)
+    must terminate with the typed Undecodable — never a hang, never a
+    garbage decode."""
+    name = data.draw(st.sampled_from(scheme_names()))
+    evs = []
+    for w in range(4):
+        t = data.draw(st.floats(min_value=0.05, max_value=0.95,
+                                allow_nan=False, allow_infinity=False))
+        evs.append(ChurnEvent(round(t, 3), "remove", w))
+    evs.sort(key=lambda e: (e.t, e.action, e.worker or -1))
+    code = get_scheme(name).make(4)
+    src = _sources(code)
+    with _executor(4, timeout_s=30.0) as ex:
+        h = ex.run_elastic(code, _piece_fns(code, src),
+                           churn=ChurnSchedule(tuple(evs)))
+        with pytest.raises(Undecodable):
+            h.result()
