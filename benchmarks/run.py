@@ -1,8 +1,18 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 from __future__ import annotations
 
+import os
 import sys
 import time
+
+# the mesh-dispatch bench needs multiple XLA devices; the split must be
+# requested before anything initializes the jax backend (benchmarks.run is
+# the entry point, so this is the one place early enough for every bench)
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
 
 from .common import Csv
 
@@ -19,6 +29,7 @@ def main() -> None:
         fig9_approx_gap,
         fig10_param_impact,
         kernels_micro,
+        mesh_dispatch,
         pipeline_depth,
         roofline,
         serving_load,
@@ -41,6 +52,7 @@ def main() -> None:
         ("pipeline", pipeline_depth.run),
         ("serving", serving_load.run),
         ("elastic", elastic_churn.run),
+        ("mesh", mesh_dispatch.run),
         ("kernels", kernels_micro.run),
         ("roofline", roofline.run),
         ("sim_speedup", sim_speedup.run),

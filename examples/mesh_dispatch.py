@@ -1,0 +1,98 @@
+"""Coded dispatch on a real device mesh (DESIGN.md §13).
+
+The same k-of-n coded GEMM, served by both implementations of the
+``dist/backend.py`` execution seam:
+
+* the **threaded pool** (`CodedExecutor`) — real k-th-arrival exit: the
+  master decodes the moment k pieces land and cancels the rest;
+* the **device mesh** (`MeshExecutor`) — each piece is one slice of the
+  mesh's ``model`` axis and encode -> per-slice Pallas GEMM -> masked
+  gather -> sharded decode compile into ONE shard_map program, built
+  once per (scheme, shape, fault pattern) and replayed from cache.
+
+Under SPMD nobody can cancel a slice, so the mesh models faults
+algebraically: dead/straggling slices are masked out of the decode,
+consuming exactly the subset the threaded master's k-th-arrival rule
+picks under the same fault — which is why the two backends decode to
+the SAME BYTES below, fault or no fault.  Swapping them is one
+constructor argument on the serving engine.
+
+This script forces an 8-way CPU device split so the mesh is genuine
+SPMD on any machine.
+
+Run: PYTHONPATH=src python examples/mesh_dispatch.py
+"""
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.coded_linear import coded_matmul
+from repro.core.schemes import get_scheme
+from repro.dist import (CodedExecutor, DeterministicDelay, FakeClock,
+                        FaultPlan, MeshExecutor)
+from repro.models.model import ModelConfig
+from repro.serving import Engine, Request
+
+N, K = 5, 3
+
+
+def banner(s):
+    print(f"\n=== {s} " + "=" * max(0, 66 - len(s)))
+
+
+def main():
+    print(f"devices: {jax.device_count()} x {jax.devices()[0].platform}")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(12, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    code = get_scheme("mds").make(N, K)
+
+    banner(f"one coded GEMM, mds({N},{K}), worker 1 dead on both backends")
+    with CodedExecutor(N, clock=FakeClock(),
+                       delay_model=DeterministicDelay(1.0),
+                       fault_plan=FaultPlan(dead=frozenset({1}))) as ex_t, \
+            MeshExecutor(dead=(1,)) as ex_m:
+        y_t = coded_matmul(x, w, code, executor=ex_t)
+        y_m = coded_matmul(x, w, code, executor=ex_m)
+        print(f"threads subset  : {list(ex_t.last_report.subset)} "
+              f"(k-th ARRIVAL under the fault plan)")
+        print(f"mesh subset     : {list(ex_m.last_report.subset)} "
+              f"(modeled ahead of dispatch, dead slice masked)")
+        same = (np.asarray(y_t).tobytes() == np.asarray(y_m).tobytes())
+        print(f"decoded bitwise-identical: {same}")
+        print(f"mesh wall: {ex_m.last_report.wall_s * 1e3:.2f} ms "
+              f"(real device time; compile_count={ex_m.compile_count})")
+        y_m2 = coded_matmul(x, w, code, executor=ex_m)
+        print(f"second call replays the cached program "
+              f"(compile_count={ex_m.compile_count}), bitwise: "
+              f"{np.asarray(y_m2).tobytes() == np.asarray(y_m).tobytes()}")
+
+    banner("the same serving engine on either backend: executor='mesh'")
+    cfg = ModelConfig(name="mesh-demo", n_layers=1, d_model=16, n_heads=2,
+                      n_kv_heads=2, d_ff=32, vocab=32, gated=False,
+                      dtype=jnp.float32, coded_n=4, coded_k=3,
+                      coded_scheme="mds")
+    reqs = [Request(i, ((np.arange(4) + 2 * i) % 32).astype(np.int32),
+                    max_new=3) for i in range(2)]
+    eng_m = Engine(cfg, seed=0, executor="mesh")
+    out_m = eng_m.generate(reqs)
+    with CodedExecutor(4, clock=FakeClock(),
+                       delay_model=DeterministicDelay(1.0)) as ex:
+        out_t = Engine(cfg, seed=0, executor=ex).generate(reqs)
+    for a, b in zip(out_t, out_m):
+        print(f"req {a.rid}: threads {a.tokens.tolist()} | "
+              f"mesh {b.tokens.tolist()} | match {a.tokens.tolist() == b.tokens.tolist()}")
+    print(f"mesh engine ran {eng_m.executor.run_count} coded GEMMs as "
+          f"shard_map programs ({eng_m.executor.compile_count} compiles)")
+
+
+if __name__ == "__main__":
+    main()

@@ -165,11 +165,28 @@ def coded_conv2d(
     if plan is None:
         plan = plan_width_split(spec, code.k)
     parts = split_input(x, plan)  # (k, B, C, H, W_I^p)
+    if executor is not None and hasattr(executor, "run_op"):
+        # backend seam (dist/backend.py): the backend owns encode ->
+        # per-piece conv -> decode (the mesh backend fuses them into one
+        # shard_map program; the thread pool encodes eagerly and thunks)
+        from ..dist.backend import CodedOp
+
+        _count_op("encode")
+        y_parts = executor.run_op(
+            CodedOp("conv2d", code, parts, w, spec=spec,
+                    assignment=assignment))
+        _count_op("decode")
+        y = jnp.concatenate(list(y_parts), axis=-1)
+        if plan.remainder is not None:
+            pr = plan.remainder
+            y_rem = conv2d(x[..., pr.a_i : pr.b_i], w, spec.stride)
+            y = jnp.concatenate([y, y_rem], axis=-1)
+        return y
     coded_in = _encode_partitions(code, parts)  # (n, ...)
     _count_op("encode")
 
     if executor is not None:
-        # Execution phase on the pool: piece i is a real conv subtask.
+        # legacy thunk surface: pre-seam executors and test doubles
         y_parts = executor.run(
             code,
             [lambda i=i: conv2d(coded_in[i], w, spec.stride)

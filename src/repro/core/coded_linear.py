@@ -58,9 +58,26 @@ def coded_matmul(
     """
     T = x.shape[0]
     plan = plan_token_split(T, code.k)
+    if executor is not None and hasattr(executor, "run_op"):
+        # backend seam (dist/backend.py): hand the backend the whole op —
+        # source stack + weights — so encode/shard-GEMM/decode can run
+        # where the backend wants them (the thread pool encodes eagerly;
+        # the mesh fuses all three into one shard_map program)
+        from ..dist.backend import CodedOp
+
+        parts = x[: code.k * plan.w_out_p].reshape(code.k, plan.w_out_p, -1)
+        _count_op("encode")
+        decoded = executor.run_op(
+            CodedOp("matmul", code, parts, w, assignment=assignment))
+        y = decoded.reshape(code.k * plan.w_out_p, w.shape[-1])
+        _count_op("decode")
+        if plan.remainder is not None:
+            y = jnp.concatenate([y, x[plan.remainder.a_i :] @ w], axis=0)
+        return y
     coded_in = _encode_tokens(code, x, plan)  # (n, T_p, d_in)
     _count_op("encode")
     if executor is not None:
+        # legacy thunk surface: pre-seam executors and test doubles
         decoded = executor.run(
             code,
             [lambda i=i: coded_in[i] @ w for i in range(code.n)],

@@ -9,6 +9,7 @@ k-of-n saving measurable.
 """
 from .adaptive import AdaptiveExecutor, AdaptivePlan, AdaptivePlanner, gemm_spec
 from .autoscale import Autoscaler, CostModel, ScaleDecision
+from .backend import CodedOp, ExecBackend, run_coded_op
 from .clock import (
     Clock,
     FakeClock,
@@ -17,6 +18,7 @@ from .clock import (
     stream_chunk_count,
 )
 from .executor import CodedExecutor, ExecHandle, decodable_prefix
+from .mesh_exec import MeshExecutor
 from .faults import (
     ChurnEvent,
     ChurnSchedule,
@@ -51,8 +53,12 @@ __all__ = [
     "RealClock",
     "pipelined_time",
     "stream_chunk_count",
+    "CodedOp",
+    "ExecBackend",
+    "run_coded_op",
     "CodedExecutor",
     "ExecHandle",
+    "MeshExecutor",
     "decodable_prefix",
     "ChurnEvent",
     "ChurnSchedule",

@@ -168,6 +168,32 @@ class CodedExecutor:
         execution layers call it unconditionally so segment runs train
         the estimator without caring which executor they were handed."""
 
+    def run_op(self, op) -> jnp.ndarray:
+        """``ExecBackend`` entry point (dist/backend.py): encode the op's
+        source stack eagerly, thunk one piece each, and delegate to
+        ``self.run`` — so ``AdaptiveExecutor``'s run override (probing,
+        auto-assignment, report observation) composes unchanged."""
+        from ..core.coded_conv import _encode_partitions, conv2d
+        from ..kernels.mds_encode import skinny_gemm_pallas
+
+        scheme = op.scheme
+        if op.kind == "matmul":
+            k, t_p, d = op.x.shape
+            coded_in = scheme.encode(op.x.reshape(k, -1)).reshape(scheme.n, t_p, d)
+            # the SAME worker kernel the mesh backend shards — a plain `@`
+            # lets XLA pick a shape-dependent GEMM algorithm, which breaks
+            # byte-for-byte equality across backends at some piece shapes
+            fns = [lambda i=i: skinny_gemm_pallas(coded_in[i], op.w)
+                   for i in range(scheme.n)]
+        else:
+            coded_in = _encode_partitions(scheme, op.x)
+            fns = [
+                lambda i=i: conv2d(coded_in[i], op.w, op.spec.stride)
+                for i in range(scheme.n)
+            ]
+        return self.run(scheme, fns, assignment=op.assignment,
+                        decode_chunks=op.decode_chunks)
+
     def _elastic_n(self, scheme: CodingScheme) -> int | None:
         """New n for the next run, or None when unchanged / not elastic.
         The fleet must still cover k — fewer members than k cannot decode,

@@ -23,7 +23,38 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from .mesh import MODEL_AXIS, dp_axes
 
 __all__ = ["param_specs", "param_shardings", "input_sharding", "cache_shardings",
-           "batch_spec"]
+           "batch_spec", "piece_spec", "piece_sharding", "decode_block_spec"]
+
+
+# ---------------------------------------------------------------------------
+# coded piece placement (dist/mesh_exec.py)
+# ---------------------------------------------------------------------------
+# The k-of-n coded path places one piece per slice of the worker axis:
+# piece-stacked operands/results carry the piece dim FIRST and shard it
+# over ``axis``; the master decode shards the flattened feature dim LAST
+# (a column-parallel skinny GEMM — every device recovers its own block of
+# all k sources from the piece rows it gathered).
+
+
+def piece_spec(ndim: int, axis: str = MODEL_AXIS) -> P:
+    """(n_pieces, ...) piece-major stack: pieces over the worker axis."""
+    if ndim < 1:
+        raise ValueError("piece-stacked arrays need at least the piece dim")
+    return P(axis, *([None] * (ndim - 1)))
+
+
+def piece_sharding(mesh: Mesh, ndim: int, axis: str = MODEL_AXIS
+                   ) -> NamedSharding:
+    return NamedSharding(mesh, piece_spec(ndim, axis))
+
+
+def decode_block_spec(ndim: int, axis: str = MODEL_AXIS) -> P:
+    """(m_pieces, ..., F) gathered stack for decode: feature blocks over
+    the worker axis, piece rows replicated (eq. 4's D @ Y is independent
+    per output column, so column blocks decode in parallel)."""
+    if ndim < 2:
+        raise ValueError("decode blocks need (pieces, ..., features) rank>=2")
+    return P(*([None] * (ndim - 1)), axis)
 
 
 def _fsdp(mesh: Mesh, fsdp: bool):

@@ -58,7 +58,9 @@ _EXECUTOR_TLS = threading.local()
 
 @contextlib.contextmanager
 def coded_executor(executor):
-    """Route this thread's coded GEMMs through a ``repro.dist.CodedExecutor``."""
+    """Route this thread's coded GEMMs through an execution backend — any
+    ``repro.dist.backend.ExecBackend`` (the threaded ``CodedExecutor`` pool
+    or a ``MeshExecutor`` device mesh)."""
     prev = getattr(_EXECUTOR_TLS, "executor", None)
     _EXECUTOR_TLS.executor = executor
     try:
@@ -292,11 +294,13 @@ def _matmul(cfg: ModelConfig, x: jax.Array, w: jax.Array) -> jax.Array:
             if ex is not None and not isinstance(x, jax.core.Tracer):
                 assignment = None
                 if hasattr(ex, "plan_matmul"):
-                    # adaptive serving: the executor re-solves (n, k°) and
-                    # the per-worker piece allocation from live membership
-                    # + telemetry before every coded GEMM (dist/adaptive.py
-                    # / dist/executor.py); elastic fleets move n with the
-                    # live worker count
+                    # backend pre-dispatch hook (dist/backend.py): adaptive
+                    # executors re-solve (n, k°) and the per-worker piece
+                    # allocation from live membership + telemetry before
+                    # every coded GEMM (dist/adaptive.py, dist/executor.py);
+                    # elastic fleets move n with the live worker count; the
+                    # mesh backend keeps (None, None, None) — membership is
+                    # the mesh, fixed at construction
                     n_new, k_new, assignment = ex.plan_matmul(
                         code, cfg.coded_scheme, flat.shape[0],
                         flat.shape[1], w.shape[-1])

@@ -103,12 +103,42 @@ class Engine:
                     "cannot keep token slices resident across the FFN "
                     "activation — it would silently fall back per-GEMM")
             cfg = dataclasses.replace(cfg, coded_segment=segment)
+        if isinstance(executor, str):
+            # backend shorthand (dist/backend.py): executor="mesh" serves
+            # the coded GEMMs as shard_map programs on the local device
+            # mesh (dist/mesh_exec.py); "threads" asks for the pool
+            # backend, which needs constructor arguments we cannot guess
+            if executor == "mesh":
+                from ..dist.mesh_exec import MeshExecutor
+
+                executor = MeshExecutor()
+            else:
+                raise ValueError(
+                    f"unknown executor backend {executor!r}: pass 'mesh' "
+                    "or a constructed executor (dist.CodedExecutor / "
+                    "dist.MeshExecutor)")
+        if executor is not None and segment:
+            from ..dist.mesh_exec import MeshExecutor
+
+            if isinstance(executor, MeshExecutor):
+                raise ValueError(
+                    "segment=True needs the threaded backend: segment "
+                    "chains dispatch opaque per-piece thunks, which a "
+                    "shard_map program cannot trace (DESIGN.md §13)")
         if adaptive:
             if executor is None:
                 raise ValueError(
                     "adaptive=True needs an executor= worker pool: the "
                     "adaptive loop learns from live run telemetry "
                     "(dist/adaptive.py), which only the pool produces")
+            from ..dist.mesh_exec import MeshExecutor
+
+            if isinstance(executor, MeshExecutor):
+                raise ValueError(
+                    "adaptive=True needs the threaded pool backend: the "
+                    "planner fits per-worker (mu, theta) from per-piece "
+                    "arrival timings, which an SPMD program does not "
+                    "produce (every slice finishes together)")
             from ..dist.adaptive import AdaptiveExecutor
 
             if isinstance(executor, AdaptiveExecutor):
@@ -147,7 +177,18 @@ class Engine:
                 for i in range(cfg.n_layers)]}
         self.max_batch = max_batch
         self.executor = executor
-        if executor is None:
+        self._bind_steps()
+        self._warm_decode()
+
+    def _bind_steps(self) -> None:
+        """(Re)bind the prefill/decode step callables to the CURRENT cfg.
+
+        The step fns close over ``cfg`` by value — rebinding (not just
+        assigning ``self.cfg``) is what makes ``retarget_coded`` take
+        effect; without it the closures would keep serving the old (n, k).
+        """
+        cfg = self.cfg
+        if self.executor is None:
             self._prefill = jax.jit(
                 lambda p, t, ms: prefill(cfg, p, t, max_seq=ms),
                 static_argnames=("ms",))
@@ -155,15 +196,36 @@ class Engine:
         else:
             self._prefill = lambda p, t, ms: prefill(cfg, p, t, max_seq=ms)
             self._decode = lambda p, c, t: decode_step(cfg, p, c, token=t)
-        if cfg.coded_n:
+
+    def _warm_decode(self) -> None:
+        if self.cfg.coded_n:
             # warm the scheme's lru-cached decode matrices at startup so the
             # first serving step pays steady-state decode cost, not a cold
             # factorization per fresh k-subset (DESIGN.md §11)
             from ..core.schemes import warm_decode_cache
             from ..models.model import _coded_scheme
 
-            warm_decode_cache(_coded_scheme(cfg.coded_scheme, cfg.coded_n,
-                                            cfg.coded_k or None))
+            warm_decode_cache(_coded_scheme(
+                self.cfg.coded_scheme, self.cfg.coded_n,
+                self.cfg.coded_k or None))
+
+    def retarget_coded(self, n: int, k: int | None = None) -> None:
+        """Re-plan the LIVE coded scheme to (n, k) — the scheduler's
+        redundancy-feedback hook (``autoscale_redundancy``, DESIGN.md §13).
+
+        ``k=None`` lets schemes with structural k (replication's
+        floor(n/2), uncoded's n) derive their own.  Cheap by design: the
+        step closures rebind and the new scheme's decode matrices warm,
+        but params, caches, and in-flight lanes are untouched — the next
+        coded GEMM simply splits (and encodes) at the new (n, k).
+        """
+        if not self.cfg.coded_n:
+            raise ValueError("retarget_coded needs a coded engine "
+                             "(cfg.coded_n unset: there is no live scheme)")
+        self.cfg = dataclasses.replace(
+            self.cfg, coded_n=int(n), coded_k=0 if k is None else int(k))
+        self._bind_steps()
+        self._warm_decode()
 
     def _executor_ctx(self):
         if self.executor is None:

@@ -107,6 +107,10 @@ class StepRecord:
     alive: int = 0    # alive workers after this step's churn + autoscaling
     joined: int = 0   # workers added this step (scripted churn + autoscaler)
     left: int = 0     # workers removed or drained this step
+    # -- live scheme telemetry (DESIGN.md §13): the (n, k) the step's coded
+    # GEMMs actually ran under, after any redundancy re-plan at its boundary
+    coded_n: int = 0
+    coded_k: int = 0
 
 
 @dataclasses.dataclass
@@ -120,6 +124,9 @@ class ServeResult:
     # membership timeline: (t, action, worker) for every applied fleet
     # change — scripted churn and autoscaler decisions alike
     membership: list = dataclasses.field(default_factory=list)
+    # redundancy re-plans applied by autoscale_redundancy: (t, n, k) at the
+    # virtual instant the live scheme changed (step boundary, pool idle)
+    replans: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -171,7 +178,7 @@ class ServingScheduler:
                  fault_drift: StragglerDrift | None = None,
                  delay_seed_stride: int = 0, overlap: bool = False,
                  churn: "ChurnSchedule | None" = None,
-                 autoscaler=None):
+                 autoscaler=None, autoscale_redundancy: bool = False):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
         if max_batch < 1:
@@ -194,10 +201,22 @@ class ServingScheduler:
         # queue depth.  Both need the engine to run on a pool.
         self.churn = churn
         self.autoscaler = autoscaler
+        # close the PR-7 loop (DESIGN.md §13): when on, each step boundary
+        # feeds Autoscaler.recommend_redundancy back into the LIVE scheme's
+        # (n, k) via Engine.retarget_coded — opt-in, because it changes the
+        # coded math mid-serve and pinned timelines must ask for it
+        self.autoscale_redundancy = bool(autoscale_redundancy)
+        self.replans: list = []
         ex = engine.executor
         if ex is None and (churn is not None or autoscaler is not None):
             raise ValueError("churn/autoscaler need an executor-backed "
                              "engine (there is no fleet to change)")
+        if self.autoscale_redundancy and autoscaler is None:
+            raise ValueError("autoscale_redundancy=True needs autoscaler= "
+                             "(recommend_redundancy is its method)")
+        if self.autoscale_redundancy and not engine.cfg.coded_n:
+            raise ValueError("autoscale_redundancy=True needs a coded "
+                             "engine (there is no live (n, k) to re-plan)")
         self.overlap = bool(overlap) and ex is not None
         self._virtual = (ex is not None
                          and getattr(ex.pool.clock, "virtual", False))
@@ -274,6 +293,7 @@ class ServingScheduler:
                 raise ValueError(
                     f"request {r.rid}: prompt {len(r.prompt)} + max_new "
                     f"{r.max_new} exceeds max_seq={self.max_seq}")
+        self.replans = []
         ex = self.engine.executor
         if ex is not None:
             # _arm_step mutates the pool's fault/delay scripting per step;
@@ -423,13 +443,15 @@ class ServingScheduler:
                         grouped=self.overlap)[0],
                     alive=(len(ex.pool.alive_workers())
                            if ex is not None else 0),
-                    joined=joined, left=left))
+                    joined=joined, left=left,
+                    coded_n=self.engine.cfg.coded_n,
+                    coded_k=self.engine.cfg.coded_k))
                 step += 1
         completions.sort(key=lambda c: c.rid)
         records.sort(key=lambda r: r.rid)
         return ServeResult(records=records, steps=steps,
                            completions=completions, t_end=t,
-                           membership=membership)
+                           membership=membership, replans=list(self.replans))
 
     def _apply_membership(self, idx: int, t: float, qdepth: int,
                           membership: list) -> tuple:
@@ -466,7 +488,48 @@ class ServingScheduler:
                 membership.append((t, "drain", w))
             joined += len(dec.joined)
             left += len(dec.drained)
+            if self.autoscale_redundancy:
+                self._replan_redundancy(t)
         return idx, joined, left
+
+    def _replan_redundancy(self, t: float) -> None:
+        """Feed ``Autoscaler.recommend_redundancy`` back into the live
+        scheme (DESIGN.md §13): n follows the fleet, and for free-k codes
+        (mds/lt) k = n - r where r counts fitted stragglers + churn
+        headroom; structural-k schemes (replication, uncoded) re-derive
+        their own k from n.  Applied at the step boundary while the pool
+        is idle — the re-plan instant lands on the virtual clock as the
+        step's ``t_start`` — and recorded in ``self.replans``."""
+        from ..models.model import _coded_scheme
+
+        eng = self.engine
+        ex = eng.executor
+        scaler = self.autoscaler
+        alive = sorted(ex.pool.alive_workers())
+        if not alive:
+            return
+        n_new = len(alive)
+        if scaler.speeds_fn is not None:
+            sp = list(scaler.speeds_fn(max(alive) + 1))
+            speeds = [sp[w] for w in alive]
+        else:
+            speeds = [1.0] * n_new
+        r = scaler.recommend_redundancy(speeds)
+        cur = _coded_scheme(eng.cfg.coded_scheme, eng.cfg.coded_n,
+                            eng.cfg.coded_k or None)
+        from ..core.schemes import commutes_elementwise
+
+        if commutes_elementwise(cur):
+            # selection schemes carry structural k (replication floor(n/2),
+            # uncoded n) — only n follows the recommendation
+            k_new = None
+        else:
+            k_new = max(1, min(n_new - r, n_new))
+        cand = _coded_scheme(eng.cfg.coded_scheme, n_new, k_new)
+        if (cand.n, cand.k) == (cur.n, cur.k):
+            return
+        eng.retarget_coded(cand.n, cand.k)
+        self.replans.append((t, cand.n, cand.k))
 
     def _overlap_step(self, lanes, cache, admit, t_start, records,
                       completions, step_reports):

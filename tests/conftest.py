@@ -11,13 +11,32 @@ which (a) turns a missing ``hypothesis`` into a hard collection error
 instead of the shim, and (b) fails the run if ANY collected test carries a
 dependency-skip marker — so the property sweep can never silently degrade
 to skips in CI again.
+
+Backend seam (ISSUE 8, DESIGN.md §13): ``REPRO_BACKEND={threads,mesh}``
+selects the execution backend the ``make_executor`` fixture builds, so the
+same executor/serving tests run against the threaded ``CodedExecutor``
+pool (default) and the shard_map ``MeshExecutor``.  The mesh backend needs
+multiple devices: we force an 8-way CPU device split here, BEFORE anything
+imports jax (device count is locked at first backend init).  The full
+tier-1 suite is verified identical under the split.
 """
 import os
 import sys
 import types
 
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
 import numpy as np
 import pytest
+
+REPRO_BACKEND = os.environ.get("REPRO_BACKEND", "threads")
+if REPRO_BACKEND not in ("threads", "mesh"):
+    raise pytest.UsageError(
+        f"REPRO_BACKEND must be 'threads' or 'mesh', got {REPRO_BACKEND!r}")
 
 _REQUIRE_DEV_DEPS = os.environ.get("REPRO_REQUIRE_DEV_DEPS", "") == "1"
 _DEP_SKIP_REASON = "hypothesis not installed (see requirements-dev.txt)"
@@ -93,3 +112,43 @@ def pytest_collectreport(report):
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def backend_name():
+    """Which execution backend this session targets (REPRO_BACKEND)."""
+    return REPRO_BACKEND
+
+
+@pytest.fixture
+def make_executor():
+    """Build the session's selected coded-dispatch backend.
+
+    ``make(n, dead=(), stragglers=())`` returns a deterministic executor:
+    threads — ``CodedExecutor`` on FakeClock + DeterministicDelay with the
+    fault pattern as a ``FaultPlan``; mesh — ``MeshExecutor`` with the
+    same pattern modeled as masked slices.  Both decode the same subset
+    bitwise-identically (tests/test_backend_equiv.py pins that), so tests
+    written against this fixture exercise whichever backend CI selects.
+    """
+    from repro.dist import (CodedExecutor, DeterministicDelay, FakeClock,
+                            FaultPlan, MeshExecutor)
+
+    made = []
+
+    def make(n, dead=(), stragglers=()):
+        if REPRO_BACKEND == "mesh":
+            ex = MeshExecutor(dead=tuple(dead),
+                              stragglers=tuple(stragglers))
+        else:
+            ex = CodedExecutor(
+                n, clock=FakeClock(), delay_model=DeterministicDelay(1.0),
+                fault_plan=FaultPlan(
+                    dead=frozenset(dead),
+                    straggler={w: 50.0 for w in stragglers}))
+        made.append(ex)
+        return ex
+
+    yield make
+    for ex in made:
+        ex.close()

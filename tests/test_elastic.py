@@ -34,7 +34,7 @@ from repro.dist import (
     WorkerPool,
 )
 from repro.models.model import ModelConfig
-from repro.serving import (Engine, Request, ServingScheduler)
+from repro.serving import (Engine, Request, ServingScheduler, StepRecord)
 
 PIECE = 1.0  # uniform virtual piece duration for every pool here
 F = 6        # columns per source row in the decode-exactness checks
@@ -640,7 +640,8 @@ class TestServingChurn:
         actions = [(a, w) for (_, a, w) in membership]
         assert ("remove", 3) in actions and ("join", 4) in actions
         # StepRecord.alive tracks the fleet through the departure
-        alive = [s[-3] for s in steps]   # StepRecord.alive field
+        i_alive = [f.name for f in dataclasses.fields(StepRecord)].index("alive")
+        alive = [s[i_alive] for s in steps]
         assert max(alive) == 4 and min(alive) == 3
 
 
@@ -697,3 +698,101 @@ def test_property_total_loss_raises_undecodable(data):
                            churn=ChurnSchedule(tuple(evs)))
         with pytest.raises(Undecodable):
             h.result()
+
+
+# ---------------------------------------------------------------------------
+# redundancy feedback: recommend_redundancy -> the live scheme's (n, k)
+# ---------------------------------------------------------------------------
+
+class TestRedundancyReplan:
+    """``autoscale_redundancy=True`` closes the PR-7 loop: at each step
+    boundary the scheduler feeds ``Autoscaler.recommend_redundancy`` back
+    into the LIVE scheme via ``Engine.retarget_coded`` (DESIGN.md §13)."""
+
+    @staticmethod
+    def _cfg():
+        return ModelConfig(name="replan-t", n_layers=1, d_model=16,
+                           n_heads=2, n_kv_heads=2, d_ff=32, vocab=32,
+                           gated=False, dtype=jnp.float32, coded_n=4,
+                           coded_k=3, coded_scheme="mds")
+
+    def _serve(self):
+        # inert autoscaler (min == alive pre-churn, backlog target far out
+        # of reach): membership changes come ONLY from the scripted churn,
+        # so the re-plan instant is pinned by the churn timestamp
+        ex = CodedExecutor(4, clock=FakeClock(),
+                           delay_model=DeterministicDelay(1.0),
+                           timeout_s=30.0, elastic=True)
+        churn = ChurnSchedule((ChurnEvent(2.0, "remove", 3),))
+        auto = Autoscaler(ex.pool, min_workers=4, max_workers=4,
+                          target_queue=100.0)
+        eng = Engine(self._cfg(), seed=0, executor=ex)
+        sched = ServingScheduler(eng, max_seq=16, max_batch=4,
+                                 master_call_s=1e-3, churn=churn,
+                                 autoscaler=auto, autoscale_redundancy=True)
+        try:
+            res = sched.serve(_reqs(4))
+        finally:
+            ex.close()
+        return res, eng
+
+    def test_replan_instant_pinned_on_virtual_clock(self):
+        res, eng = self._serve()
+        # exactly one re-plan: the worker-3 departure shrinks the fleet to
+        # 3, and r=1 (uniform speeds) re-plans mds(4,3) -> mds(3,2)
+        assert res.replans == [(res.replans[0][0], 3, 2)]
+        t_replan = res.replans[0][0]
+        # ...at the boundary of the FIRST step starting at/after the churn
+        # event — the same virtual instant the membership change lands
+        boundary = [s for s in res.steps if s.t_start >= 2.0]
+        assert boundary and t_replan == boundary[0].t_start
+        assert (t_replan, "remove", 3) in res.membership
+        # the StepRecord stream shows the live (n, k) flip AT that step:
+        # (4, 3) strictly before, (3, 2) from the re-plan step on
+        for s in res.steps:
+            if s.t_start < t_replan:
+                assert (s.coded_n, s.coded_k) == (4, 3)
+            else:
+                assert (s.coded_n, s.coded_k) == (3, 2)
+        assert (eng.cfg.coded_n, eng.cfg.coded_k) == (3, 2)
+
+    def test_replan_run_is_deterministic(self):
+        a, _ = self._serve()
+        b, _ = self._serve()
+        assert a.replans == b.replans
+        assert ([dataclasses.astuple(s) for s in a.steps]
+                == [dataclasses.astuple(s) for s in b.steps])
+        assert ({c.rid: c.tokens.tolist() for c in a.completions}
+                == {c.rid: c.tokens.tolist() for c in b.completions})
+
+    def test_validation(self):
+        eng = Engine(self._cfg(), seed=0)  # no executor
+        with pytest.raises(ValueError, match="autoscaler"):
+            ServingScheduler(eng, max_seq=16, autoscale_redundancy=True)
+        # an autoscaler without a fleet is already refused upstream — the
+        # redundancy loop can never arm on a poolless engine
+        with pytest.raises(ValueError, match="executor"):
+            ServingScheduler(eng, max_seq=16, autoscaler=object(),
+                             autoscale_redundancy=True)
+
+    def test_structural_k_schemes_rederive_k(self):
+        # replication carries structural k = floor(n/2): the re-plan only
+        # follows n, letting the scheme derive its own k (4,2) -> (3,1)
+        ex = CodedExecutor(4, clock=FakeClock(),
+                           delay_model=DeterministicDelay(1.0),
+                           timeout_s=30.0, elastic=True)
+        cfg = dataclasses.replace(self._cfg(), coded_scheme="replication",
+                                  coded_n=4, coded_k=2)
+        churn = ChurnSchedule((ChurnEvent(2.0, "remove", 3),))
+        auto = Autoscaler(ex.pool, min_workers=4, max_workers=4,
+                          target_queue=100.0)
+        eng = Engine(cfg, seed=0, executor=ex)
+        sched = ServingScheduler(eng, max_seq=16, max_batch=4,
+                                 master_call_s=1e-3, churn=churn,
+                                 autoscaler=auto, autoscale_redundancy=True)
+        try:
+            res = sched.serve(_reqs(4))
+        finally:
+            ex.close()
+        assert [(n, k) for _, n, k in res.replans] == [(3, 1)]
+        assert (eng.cfg.coded_n, eng.cfg.coded_k) == (3, 1)
