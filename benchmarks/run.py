@@ -51,6 +51,7 @@ def main() -> None:
         ("adaptive", adaptive_replan.run),
         ("pipeline", pipeline_depth.run),
         ("serving", serving_load.run),
+        ("prefill", serving_load.run_prefill),
         ("elastic", elastic_churn.run),
         ("mesh", mesh_dispatch.run),
         ("kernels", kernels_micro.run),

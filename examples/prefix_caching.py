@@ -1,0 +1,76 @@
+"""Prefill-efficient serving: packing, chunking, and coded prefix caching.
+
+DESIGN.md §14 in one demo.  A Zipf-reused shared-prefix workload (system
+prompts / few-shot templates) is served twice on one engine + worker pool:
+
+1. **cold pass** — every prompt runs a coded prefill, but co-admitted
+   mixed-length prompts are *packed* into ONE padded+masked coded call
+   (n pieces total, never per-request) and long prompts are *chunked*
+   into scheduler-step-sized prefill slices interleaved with decode
+   steps.  Finished prefills deposit their per-request KV blocks into a
+   radix :class:`PrefixCache`.
+2. **warm pass** — the same traffic replayed: the cache restores each
+   prompt's shared-prefix KV and only the sub-``k`` fresh suffix remains,
+   which runs master-local — the pool sees ZERO prefill pieces, proven
+   on the dispatch counters, and the tokens stay bitwise-identical.
+
+Cached KV is post-decode plaintext, so coding-layer events (retargeting
+(n, k), churn, backend swaps) never invalidate it.
+
+Run: PYTHONPATH=src python examples/prefix_caching.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.dist import CodedExecutor, DeterministicDelay, FakeClock
+from repro.models.model import ModelConfig
+from repro.serving import (Engine, LengthDist, PoissonArrivals, PrefixCache,
+                           ServingScheduler, SharedPrefixDist, Workload,
+                           summarize)
+
+BLOCK = 8  # radix-cache block == shared-prefix family length
+
+cfg = ModelConfig(name="tiny", n_layers=2, d_model=32, n_heads=4,
+                  n_kv_heads=2, d_ff=64, vocab=64, gated=False,
+                  coded_n=4, coded_k=3, coded_scheme="mds",
+                  dtype=jnp.float32)
+
+# 3 prefix families of 8 tokens, Zipf-reused, plus a fresh 1-2 token
+# suffix per request: suffix < k, so a family hit never reaches the pool.
+wl = Workload(PoissonArrivals(rate=0.4), LengthDist.fixed(1),
+              LengthDist((2, 3)), vocab=cfg.vocab, seed=7,
+              shared_prefix=SharedPrefixDist(
+                  n_families=3, prefix_len=BLOCK,
+                  suffix_len=LengthDist((1, 2)), zipf_a=1.2,
+                  vocab=cfg.vocab, seed=11))
+reqs = wl.generate(12)
+
+cache = PrefixCache(capacity_bytes=8 << 20, block=BLOCK)
+with CodedExecutor(4, clock=FakeClock(),
+                   delay_model=DeterministicDelay(0.01)) as ex:
+    eng = Engine(cfg, seed=0, executor=ex)
+    results = []
+    for label in ("cold", "warm"):
+        # chunk_tokens bounds per-step prefill work: prompts at or under
+        # it (and cache-cold) pack into one coded call; anything longer,
+        # or resuming atop restored prefix KV, streams in chunks.
+        sched = ServingScheduler(eng, max_seq=wl.max_seq, max_batch=4,
+                                 packed=True, chunk_tokens=2 * BLOCK,
+                                 prefix_cache=cache)
+        res = sched.serve(reqs)
+        results.append(res)
+        s = summarize(res)
+        pieces = sum(st.prefill_dispatches for st in res.steps)
+        print(f"{label:4s} pass: prefill pieces {pieces:3d}, packed tokens "
+              f"{s['packed_tokens_total']:2d} (+{s['packed_pad_tokens_total']}"
+              f" pad), chunks {s['prefill_chunks_total']}, "
+              f"hit rate {s['prefix_hit_rate']:.0%}")
+
+cold, warm = results
+same = all(np.array_equal(a.tokens, b.tokens)
+           for a, b in zip(cold.completions, warm.completions))
+warm_pieces = sum(st.prefill_dispatches for st in warm.steps)
+print(f"\ncache: {cache.stats.hits}/{cache.stats.lookups} lookups hit, "
+      f"{cache.n_blocks} blocks resident ({cache.bytes / 1e3:.0f} kB)")
+print(f"warm replay pool-dispatch-free: {warm_pieces == 0}; "
+      f"tokens bitwise-identical across passes: {same}")

@@ -3,6 +3,8 @@ from .model import (
     init_params,
     forward,
     prefill,
+    prefill_resume,
+    supports_prefill_pack,
     decode_step,
     init_cache,
     param_count,
@@ -27,8 +29,8 @@ from .cnn import (
 from .frontends import synthetic_frames, synthetic_patches
 
 __all__ = [
-    "ModelConfig", "init_params", "forward", "prefill", "decode_step",
-    "init_cache", "param_count",
+    "ModelConfig", "init_params", "forward", "prefill", "prefill_resume",
+    "supports_prefill_pack", "decode_step", "init_cache", "param_count",
     "SSMDims", "ssd_chunked", "ssd_step",
     "LayerInfo", "vgg16_conv_specs", "resnet18_conv_specs", "is_type1",
     "type1_threshold", "init_small_cnn", "small_cnn_forward",

@@ -16,7 +16,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["blockwise_causal_attention", "decode_attention", "flash_causal_attention"]
+__all__ = ["blockwise_causal_attention", "decode_attention", "chunk_attention",
+           "flash_causal_attention"]
 
 NEG_INF = -1e30
 
@@ -142,6 +143,42 @@ def decode_attention(
     out = jnp.einsum("bkgqs,bskp->bqkgp", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, 1, H, P).astype(q.dtype)
+
+
+def chunk_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos0: jax.Array,
+) -> jax.Array:
+    """Multi-token attention over a ring KV cache — the chunked-prefill
+    primitive (DESIGN.md §14).
+
+    q: (B, Tc, H, P) — a chunk of prompt queries whose keys/values have
+    already been written into the cache at slots [pos0, pos0 + Tc);
+    caches: (B, S, K, P); pos0: scalar int32, the absolute position of the
+    chunk's first token (every lane in a resuming chunk sits at the same
+    depth — mixed-depth lanes belong to ``decode_attention``).  Query t
+    attends causally to slots <= pos0 + t; never-written slots beyond the
+    chunk are masked out, so a cache holding only [0, pos0 + Tc) valid
+    entries (zeros or packed-prefill padding garbage elsewhere) is safe.
+    Returns (B, Tc, H, P).  ``chunk_attention(q, k, v, p)`` at Tc = 1 is
+    exactly ``decode_attention`` below the ring-wrap regime.
+    """
+    B, S, K, P = k_cache.shape
+    Tc, H = q.shape[1], q.shape[2]
+    G = H // K
+    scale = P ** -0.5
+    qr = q.reshape(B, Tc, K, G, P)
+    s = jnp.einsum("btkgp,bskp->bkgts", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    abs_q = jnp.asarray(pos0) + jnp.arange(Tc)
+    valid = jnp.arange(S)[None, :] <= abs_q[:, None]  # (Tc, S)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgts,bskp->btkgp", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Tc, H, P).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -28,8 +28,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .attention import (blockwise_causal_attention, decode_attention,
-                        flash_causal_attention)
+from .attention import (blockwise_causal_attention, chunk_attention,
+                        decode_attention, flash_causal_attention)
 from .common import lecun_init, rms_norm, rope, rope_at
 from .ssm import (
     SSMDims,
@@ -40,7 +40,8 @@ from .ssm import (
     mamba_step,
 )
 
-__all__ = ["ModelConfig", "init_params", "forward", "prefill", "decode_step",
+__all__ = ["ModelConfig", "init_params", "forward", "prefill",
+           "prefill_resume", "supports_prefill_pack", "decode_step",
            "init_cache", "param_count", "coded_executor", "current_executor"]
 
 
@@ -634,14 +635,55 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
     return logits, {"layers": new_layers, "pos": pos + 1}
 
 
+def supports_prefill_pack(cfg: ModelConfig) -> bool:
+    """Whether mixed-length packed prefill / chunked prefill resume are
+    EXACT for this architecture (DESIGN.md §14).
+
+    Packing right-pads prompts and relies on causality alone to hide the
+    padding: position t's output depends only on tokens <= t, so every
+    real token is untouched by the padded tail.  That argument breaks for
+
+    * mamba/SSM blocks — the recurrent state integrates every position,
+      padding included, and a chunk cannot resume from a stored KV slice;
+    * MoE layers — capacity-based routing couples tokens across the whole
+      (batch, chunk): padded rows compete for expert slots, and a chunked
+      prefill sees a different capacity pool than the one-shot prompt;
+    * sliding-window caches — the ring wraps below prompt length, so
+      per-lane "slots <= pos are valid" masking no longer holds.
+
+    The serving engine consults this to auto-fall back to equal-length
+    grouping rather than silently serving approximate tokens.
+    """
+    return (cfg.block == "attn" and not cfg.is_moe
+            and cfg.sliding_window == 0 and cfg.shared_attn_period == 0)
+
+
 def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array | None = None,
             embeds: jax.Array | None = None,
-            max_seq: int | None = None) -> tuple[jax.Array, dict]:
+            max_seq: int | None = None,
+            lens: jax.Array | None = None) -> tuple[jax.Array, dict]:
     """Process a full prompt, returning (last-position logits, cache).
 
     ``max_seq`` sizes the KV ring cache (prompt + planned generation);
     sliding-window archs cap it at the window.
+
+    ``lens`` (B,) enables PACKED mixed-length prefill (DESIGN.md §14):
+    prompts right-padded to a shared T share one causal forward — padding
+    sits strictly in every real token's future, so real positions are
+    unchanged — and each lane's logits are gathered at ITS last real
+    position ``lens[b] - 1`` instead of column T-1.  The returned cache
+    carries per-lane (B,) positions (``pos = lens``); slots at and beyond
+    a lane's length hold padding garbage that ``decode_attention``'s
+    validity mask never reads.  Only exact for ``supports_prefill_pack``
+    architectures.
     """
+    if lens is not None and not supports_prefill_pack(cfg):
+        raise ValueError(
+            "lens= (packed mixed-length prefill) needs an architecture "
+            "where right-padding is invisible to real tokens: dense attn, "
+            "no MoE routing, no SSM state, no sliding window "
+            f"(got block={cfg.block!r}, n_experts={cfg.n_experts}, "
+            f"sliding_window={cfg.sliding_window})")
     x = _embed_in(cfg, params, tokens, embeds)
     B, T, _ = x.shape
     positions = jnp.arange(T)
@@ -683,8 +725,14 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array | None = None,
                 entry["kv"] = kv
             layers.append(entry)
     x = rms_norm(x, params["final_norm"])
-    logits = _lm_head(cfg, params, x[:, -1])
-    cache = {"layers": layers, "pos": jnp.asarray(T, jnp.int32)}
+    if lens is None:
+        logits = _lm_head(cfg, params, x[:, -1])
+        cache = {"layers": layers, "pos": jnp.asarray(T, jnp.int32)}
+    else:
+        lens = jnp.asarray(lens, jnp.int32)
+        x_last = x[jnp.arange(B), lens - 1]  # each lane's last REAL position
+        logits = _lm_head(cfg, params, x_last)
+        cache = {"layers": layers, "pos": lens}
     return logits[:, None], cache
 
 
@@ -723,3 +771,91 @@ def _prefill_attn(cfg, layer, x, positions, win, S, ffn_key):
         tail_k = jnp.roll(k[:, -S:], shift=roll, axis=1)
         tail_v = jnp.roll(v[:, -S:], shift=roll, axis=1)
     return out, {"k": tail_k, "v": tail_v}
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: resume a partially-filled cache with the next chunk
+# ---------------------------------------------------------------------------
+
+def _attn_resume(cfg: ModelConfig, p: dict, x: jax.Array, kv: dict,
+                 pos0: jax.Array, positions: jax.Array
+                 ) -> tuple[jax.Array, dict]:
+    """Chunk attention block: write Tc new K/V slots, attend causally over
+    the whole cache (DESIGN.md §14)."""
+    q = jnp.einsum("btd,dhp->bthp", x, p["wq"])
+    k = jnp.einsum("btd,dkp->btkp", x, p["wk"])
+    v = jnp.einsum("btd,dkp->btkp", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(kv["k"], k, pos0, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(kv["v"], v, pos0, 1)
+    o = chunk_attention(q, k_cache, v_cache, pos0)
+    out = jnp.einsum("bthp,hpd->btd", o, p["wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _attn_block_resume(cfg, layer, x, kv, pos0, positions):
+    a, kv = _attn_resume(cfg, layer["attn"], rms_norm(x, layer["attn_norm"]),
+                         kv, pos0, positions)
+    h = x + a
+    return h + _ffn(cfg, layer["ffn"], rms_norm(h, layer["ffn_norm"])), kv
+
+
+def prefill_resume(cfg: ModelConfig, params: dict, cache: dict,
+                   tokens: jax.Array) -> tuple[jax.Array, dict]:
+    """Extend a partially-prefilled cache by one chunk of prompt tokens.
+
+    tokens: (B, Tc) int32; ``cache["pos"]`` must be a SCALAR — every lane
+    of a resuming chunk sits at the same depth (a chunk stream owns its
+    lanes until the prompt is fully consumed; mixed-depth lanes are the
+    decode batch's business).  Returns (logits at the chunk's last
+    position (B, 1, V), updated cache with ``pos += Tc``).
+
+    This is the serving primitive behind BOTH chunked prefill (a long
+    prompt streamed scheduler-step-sized pieces at a time, bounding
+    per-step pool occupancy) and coded prefix-cache hits (resume from a
+    cache whose first ``pos`` slots were restored from the radix cache —
+    the skipped positions' coded GEMMs never run; serving/prefix_cache).
+    Only exact for ``supports_prefill_pack`` architectures; the chunk's
+    FFN GEMMs flow through the same ``_matmul`` coded path as every other
+    type-1 GEMM, so a chunk with >= k token rows still gets straggler
+    protection.
+    """
+    if not supports_prefill_pack(cfg):
+        raise ValueError(
+            "prefill_resume needs a dense-attention architecture: SSM "
+            "state cannot resume from stored KV, MoE capacity routing "
+            "couples tokens across chunks, and sliding-window rings wrap "
+            f"(got block={cfg.block!r}, n_experts={cfg.n_experts}, "
+            f"sliding_window={cfg.sliding_window})")
+    x = _embed_in(cfg, params, tokens)
+    Tc = x.shape[1]
+    pos0 = jnp.asarray(cache["pos"], jnp.int32)
+    if pos0.ndim:
+        raise ValueError(
+            "prefill_resume needs a scalar cache position: all lanes of a "
+            "chunk resume from the same depth (per-lane (B,) positions "
+            "mean this cache already joined the decode batch)")
+    positions = pos0 + jnp.arange(Tc)
+    if cfg.stacked:
+        def body(x, xs):
+            layer, entry = xs
+            x, kv = _attn_block_resume(cfg, layer, x, entry["kv"], pos0,
+                                       positions)
+            return x, {"kv": kv}
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"],
+                                               cache["layers"]))
+    else:
+        new_layers = []
+        for i, layer in enumerate(params["layers"]):
+            entry = dict(cache["layers"][i])
+            x, entry["kv"] = _attn_block_resume(cfg, layer, x, entry["kv"],
+                                                pos0, positions)
+            new_layers.append(entry)
+    x = rms_norm(x, params["final_norm"])
+    logits = _lm_head(cfg, params, x[:, -1])
+    return logits[:, None], {"layers": new_layers, "pos": pos0 + Tc}

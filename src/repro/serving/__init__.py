@@ -1,14 +1,17 @@
 from .engine import Engine, Request, Completion, cache_cat, cache_take
 from .metrics import percentiles, summarize
+from .prefix_cache import PrefixCache, PrefixCacheStats
 from .scheduler import (RequestRecord, ServeResult, ServingScheduler,
                         StepRecord)
 from .traffic import (ArrivalProcess, BurstyArrivals, LengthDist,
-                      PoissonArrivals, TraceArrivals, Workload)
+                      PoissonArrivals, SharedPrefixDist, TraceArrivals,
+                      Workload)
 
 __all__ = [
     "Engine", "Request", "Completion", "cache_cat", "cache_take",
     "ServingScheduler", "ServeResult", "RequestRecord", "StepRecord",
     "percentiles", "summarize",
+    "PrefixCache", "PrefixCacheStats",
     "ArrivalProcess", "PoissonArrivals", "BurstyArrivals", "TraceArrivals",
-    "LengthDist", "Workload",
+    "LengthDist", "SharedPrefixDist", "Workload",
 ]

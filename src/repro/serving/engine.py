@@ -46,7 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models import decode_step, init_params, prefill
+from ..models import (decode_step, init_cache, init_params, prefill,
+                      prefill_resume, supports_prefill_pack)
 from ..models.model import ModelConfig, coded_executor
 
 __all__ = ["Request", "Completion", "Engine", "cache_cat", "cache_take"]
@@ -192,10 +193,17 @@ class Engine:
             self._prefill = jax.jit(
                 lambda p, t, ms: prefill(cfg, p, t, max_seq=ms),
                 static_argnames=("ms",))
+            self._prefill_pack = jax.jit(
+                lambda p, t, ln, ms: prefill(cfg, p, t, max_seq=ms, lens=ln),
+                static_argnames=("ms",))
             self._decode = jax.jit(lambda p, c, t: decode_step(cfg, p, c, token=t))
+            self._resume = jax.jit(lambda p, c, t: prefill_resume(cfg, p, c, t))
         else:
             self._prefill = lambda p, t, ms: prefill(cfg, p, t, max_seq=ms)
+            self._prefill_pack = (
+                lambda p, t, ln, ms: prefill(cfg, p, t, max_seq=ms, lens=ln))
             self._decode = lambda p, c, t: decode_step(cfg, p, c, token=t)
+            self._resume = lambda p, c, t: prefill_resume(cfg, p, c, t)
 
     def _warm_decode(self) -> None:
         if self.cfg.coded_n:
@@ -298,6 +306,115 @@ class Engine:
         nxt = jnp.argmax(logits[..., : self.cfg.vocab], -1).astype(jnp.int32)
         return np.asarray(nxt)[:, 0], cache
 
+    # -- prefill-efficient serving (DESIGN.md §14) --------------------------
+
+    @property
+    def supports_packed(self) -> bool:
+        """Whether packed mixed-length prefill / chunk resume / prefix
+        caching are exact for this engine's architecture (dense attention,
+        no MoE, no SSM state, no sliding window)."""
+        return supports_prefill_pack(self.cfg)
+
+    def _require_packed(self, what: str) -> None:
+        if not self.supports_packed:
+            raise ValueError(
+                f"{what} needs a dense-attention architecture (packed "
+                "padding must be invisible to real tokens and KV slices "
+                "must resume): see models.supports_prefill_pack "
+                f"(cfg: block={self.cfg.block!r}, "
+                f"n_experts={self.cfg.n_experts}, "
+                f"sliding_window={self.cfg.sliding_window})")
+
+    def prefill_packed(self, prompts: Sequence[np.ndarray], max_seq: int
+                       ) -> tuple[np.ndarray, dict]:
+        """Prefill b prompts of MIXED lengths in one padded, masked call:
+        -> ((b,) first generated tokens, cache with per-lane (b,)
+        positions).
+
+        Prompts are right-padded to the longest; causality keeps padding
+        strictly in every real token's future, and each lane's logits are
+        gathered at its own last real position, so tokens match the
+        per-length serial prefill (the coded GEMMs see the padded
+        (b * T_max, d) token stack — ONE n-piece dispatch per GEMM for
+        the whole mixed-length admission, extending the batched-dispatch
+        counter proof to unequal prompts)."""
+        self._require_packed("prefill_packed (mixed-length packing)")
+        lens = np.asarray([len(p) for p in prompts], np.int32)
+        if lens.min() < 1:
+            raise ValueError("prefill_packed needs non-empty prompts")
+        T = int(lens.max())
+        toks = np.zeros((len(lens), T), np.int32)
+        for j, p in enumerate(prompts):
+            toks[j, : lens[j]] = np.asarray(p, np.int32)
+        logits, cache = self._prefill_pack(
+            self.params, jnp.asarray(toks), jnp.asarray(lens), max_seq)
+        nxt = jnp.argmax(logits[..., : self.cfg.vocab], -1).astype(jnp.int32)
+        return np.asarray(nxt)[:, 0], cache
+
+    def new_stream_cache(self, max_seq: int, batch: int = 1) -> dict:
+        """Empty ring cache for a chunked-prefill stream (scalar pos 0):
+        feed it prompt chunks via :meth:`prefill_chunk`."""
+        self._require_packed("chunked prefill")
+        return init_cache(self.cfg, batch, max_seq)
+
+    def prefill_chunk(self, cache: dict, tokens: np.ndarray
+                      ) -> tuple[np.ndarray, dict]:
+        """Consume one (b, Tc) chunk of prompt into a stream cache:
+        -> ((b,) next-token samples at the chunk's last position, updated
+        cache).  The returned tokens only MEAN anything on the final
+        chunk (mid-prompt logits predict tokens the prompt already
+        contains); the cache is valid after every chunk.  A chunk's FFN
+        GEMMs route through the coded path exactly like any prefill —
+        chunks with >= k token rows dispatch to the pool, smaller ones
+        (a prefix-cache hit's one-token suffix) stay on the master and
+        issue ZERO dispatches."""
+        self._require_packed("prefill_chunk (chunk resume)")
+        toks = jnp.asarray(tokens, jnp.int32)
+        pos0 = int(np.asarray(cache["pos"]))
+        S = _seq_extent(cache)
+        if pos0 + toks.shape[1] > S:
+            raise ValueError(
+                f"chunk overruns the ring cache: pos {pos0} + chunk "
+                f"{toks.shape[1]} > cache extent {S}")
+        logits, cache = self._resume(self.params, cache, toks)
+        nxt = jnp.argmax(logits[..., : self.cfg.vocab], -1).astype(jnp.int32)
+        return np.asarray(nxt)[:, 0], cache
+
+    def kv_prefix(self, cache: dict, lane: int, t0: int, t1: int):
+        """Slice one lane's KV for positions [t0, t1) out of a batch
+        cache — the segment a :class:`~repro.serving.prefix_cache.
+        PrefixCache` stores per radix block.  The slice keeps a length-1
+        lane axis so segments concatenate/restore with plain tree ops."""
+        axis = _batch_axis(cache)
+
+        def f(x):
+            x = jax.lax.slice_in_dim(x, lane, lane + 1, axis=axis)
+            return jax.lax.slice_in_dim(x, t0, t1, axis=axis + 1)
+
+        return jax.tree_util.tree_map(f, cache["layers"])
+
+    def cache_from_prefix(self, segments: Sequence, length: int,
+                          max_seq: int) -> dict:
+        """Rebuild a single-lane stream cache from prefix-cache segments:
+        the restored slots cover positions [0, length) and ``pos`` is the
+        SCALAR ``length``, ready for :meth:`prefill_chunk` to consume the
+        prompt's unmatched suffix.  Restored KV is post-decode plaintext:
+        no coded GEMM runs for the restored positions, and the live
+        scheme's (n, k) — even if re-targeted since the KV was cached —
+        is irrelevant to its validity."""
+        self._require_packed("prefix-cache restore")
+        base = init_cache(self.cfg, 1, max_seq)
+        axis = _batch_axis(base)
+        joined = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=axis + 1), *segments)
+
+        def put(z, seg):
+            return jax.lax.dynamic_update_slice_in_dim(
+                z, seg.astype(z.dtype), 0, axis + 1)
+
+        layers = jax.tree_util.tree_map(put, base["layers"], joined)
+        return {"layers": layers, "pos": jnp.asarray(length, jnp.int32)}
+
     def _run_batch(self, chunk: list[Request], T: int, max_new: int,
                    t0: float):
         toks = jnp.asarray(np.stack([r.prompt for r in chunk]), jnp.int32)
@@ -342,6 +459,12 @@ class Engine:
 
 def _batch_axis(cache: dict) -> int:
     return 1 if isinstance(cache["layers"], dict) else 0
+
+
+def _seq_extent(cache: dict) -> int:
+    """Ring size S of a cache (the slot axis sits just after the lanes)."""
+    leaf = jax.tree_util.tree_leaves(cache["layers"])[0]
+    return int(leaf.shape[_batch_axis(cache) + 1])
 
 
 def cache_cat(caches: Sequence[dict]) -> dict:

@@ -48,7 +48,8 @@ def percentiles(xs: Sequence[float], pcts: Sequence[float] = PCTS) -> dict:
 
 def summarize(result: ServeResult, *, deadline_s: float | None = None,
               ttft_deadline_s: float | None = None,
-              epoch_s: float | None = None) -> dict:
+              epoch_s: float | None = None,
+              scenario: str | None = None) -> dict:
     """One load test -> a JSON-ready SLO report.
 
     ``deadline_s`` is the end-to-end SLO (arrival -> last token) goodput is
@@ -58,7 +59,9 @@ def summarize(result: ServeResult, *, deadline_s: float | None = None,
     completions by their done-time into epochs of that width and reports
     per-epoch goodput/attainment (needs ``deadline_s``) — the evidence an
     elastic fleet HELD goodput through a churn trace rather than merely
-    averaging over the collapse.
+    averaging over the collapse.  ``scenario`` labels the report
+    (MLPerf-style "offline" / "server") so per-scenario SLO attainment
+    stays attributable when several runs land in one results file.
     """
     recs = result.records
     steps = result.steps
@@ -66,6 +69,7 @@ def summarize(result: ServeResult, *, deadline_s: float | None = None,
     n = len(recs)
     tokens = int(sum(r.n_tokens for r in recs))
     out: dict = {
+        **({"scenario": str(scenario)} if scenario is not None else {}),
         "requests": n,
         "duration_s": float(result.t_end),
         "tokens": tokens,
@@ -102,6 +106,25 @@ def summarize(result: ServeResult, *, deadline_s: float | None = None,
         busy = [s for s in steps if s.batch > 0]
         out["dispatches_per_step_mean"] = (
             float(np.mean([s.dispatches for s in busy])) if busy else 0.0)
+        # -- prefill-efficiency telemetry (DESIGN.md §14).  prefix_hit_rate
+        # is token-weighted: skipped prefill positions over all prompt
+        # tokens served — the fraction of prefill work the cache deleted.
+        out["prefill_dispatches_total"] = int(
+            sum(s.prefill_dispatches for s in steps))
+        out["packed_tokens_total"] = int(
+            sum(s.packed_tokens for s in steps))
+        out["packed_pad_tokens_total"] = int(
+            sum(s.packed_pad_tokens for s in steps))
+        out["prefill_chunks_total"] = int(
+            sum(s.prefill_chunks for s in steps))
+        hit_tokens = int(sum(s.prefix_hit_tokens for s in steps))
+        out["prefix_hit_tokens_total"] = hit_tokens
+        prompt_tokens = int(sum(r.prompt_len for r in recs))
+        out["prefix_hit_rate"] = (hit_tokens / prompt_tokens
+                                  if prompt_tokens else 0.0)
+        out["cache_evictions_total"] = int(
+            sum(s.cache_evictions for s in steps))
+        out["cache_bytes_final"] = int(steps[-1].cache_bytes)
         alive = [s.alive for s in steps]
         if any(alive):
             out["alive_timeline"] = [[float(s.t_start), int(s.alive)]

@@ -29,6 +29,23 @@ Two time planes, mirroring the pool (dist/clock.py):
 * **measured** — no executor (or a ``RealClock`` pool): each call costs its
   wall-clock time on the same relative timeline.  Real, but not
   deterministic; tests use virtual.
+
+Prefill is the other half of the latency story (DESIGN.md §14), and three
+opt-outable mechanisms attack it:
+
+* **prefill packing** (``packed``, on by default when the architecture
+  supports it) — co-admitted prompts of *mixed* lengths prefill in ONE
+  padded, masked call instead of one call per distinct length, so a step's
+  admission costs n coded pieces per GEMM total, never per length bucket;
+* **chunked prefill** (``chunk_tokens``) — prompts longer than the chunk
+  size prefill as a *stream*, one chunk per scheduler step interleaved
+  with the running batch's decode, bounding every step's pool occupancy
+  (and thus decode TPOT) by the chunk size instead of the longest prompt;
+* **coded prefix caching** (``prefix_cache``) — admission looks the prompt
+  up in a :class:`~repro.serving.prefix_cache.PrefixCache`; matched
+  blocks' KV restore straight into the lane and their coded GEMMs are
+  never dispatched (counted on the pool's own counters), only the
+  unmatched suffix prefills.
 """
 from __future__ import annotations
 
@@ -40,6 +57,7 @@ import numpy as np
 
 from ..dist.faults import ChurnSchedule, StragglerDrift
 from .engine import Completion, Engine, Request, cache_cat, cache_take
+from .prefix_cache import PrefixCache
 
 __all__ = ["RequestRecord", "StepRecord", "ServeResult", "ServingScheduler"]
 
@@ -111,6 +129,13 @@ class StepRecord:
     # GEMMs actually ran under, after any redundancy re-plan at its boundary
     coded_n: int = 0
     coded_k: int = 0
+    # -- prefill-efficiency telemetry (DESIGN.md §14)
+    packed_tokens: int = 0      # real prompt tokens prefilled via packing
+    packed_pad_tokens: int = 0  # padding slots the pack wasted (masked out)
+    prefill_chunks: int = 0     # chunk-resume calls issued this step
+    prefix_hit_tokens: int = 0  # prompt positions restored from the cache
+    cache_bytes: int = 0        # resident prefix-cache bytes after the step
+    cache_evictions: int = 0    # prefix-cache blocks evicted this step
 
 
 @dataclasses.dataclass
@@ -134,6 +159,19 @@ class _Lane:
     req: Request
     rec: RequestRecord
     tokens: list
+
+
+@dataclasses.dataclass
+class _Stream:
+    """A prompt mid-prefill: it owns a batch slot (so admission cannot
+    oversubscribe the decode batch it will join) but decodes nothing until
+    its last chunk lands.  ``pos`` counts consumed prompt tokens — prefix
+    -cache hits start it at the restored length."""
+
+    req: Request
+    rec: RequestRecord
+    cache: dict
+    pos: int
 
 
 class ServingScheduler:
@@ -170,6 +208,31 @@ class ServingScheduler:
     the serial sum of per-call costs, and newly admitted lanes join the
     decode batch the NEXT step (their token values are unchanged; only
     timing attribution moves).  Ignored when the engine has no executor.
+
+    ``packed`` (DESIGN.md §14) prefills a step's whole admission — mixed
+    prompt lengths included — in ONE padded, masked engine call instead of
+    one call per distinct length.  Token streams are bitwise-unchanged
+    (causality hides right-padding; each lane's logits are gathered at its
+    own last real position); what changes is the dispatch bill: one
+    n-piece pool dispatch per GEMM per *admission*, never per length
+    bucket.  Defaults to the engine's architecture capability.
+
+    ``chunk_tokens`` > 0 turns prompts longer than the chunk into prefill
+    *streams*: each scheduler step advances every stream by one chunk
+    (``Engine.prefill_chunk``) alongside the running batch's decode, so a
+    long prompt stops monopolizing the pool for a whole prefill and
+    decode TPOT stays bounded by the chunk size.  A stream owns a batch
+    slot from admission and joins the decode batch the step its last
+    chunk lands (that chunk's sample is its first token).
+
+    ``prefix_cache`` attaches a :class:`~repro.serving.prefix_cache.
+    PrefixCache`: admission looks up ``prompt[:-1]``, restores every
+    matched block's KV into the lane (``Engine.cache_from_prefix`` — no
+    pool dispatch, charged zero virtual time: it is master-local slicing)
+    and prefills only the unmatched suffix as a stream; completed
+    prefills insert their prompt's blocks back.  Cached KV is post-decode
+    plaintext, so ``retarget_coded``, churn, and autoscaling invalidate
+    nothing.  Both features need the serial timeline (``overlap=False``).
     """
 
     def __init__(self, engine: Engine, *, max_seq: int, max_batch: int = 8,
@@ -178,7 +241,9 @@ class ServingScheduler:
                  fault_drift: StragglerDrift | None = None,
                  delay_seed_stride: int = 0, overlap: bool = False,
                  churn: "ChurnSchedule | None" = None,
-                 autoscaler=None, autoscale_redundancy: bool = False):
+                 autoscaler=None, autoscale_redundancy: bool = False,
+                 packed: bool | None = None, chunk_tokens: int = 0,
+                 prefix_cache: PrefixCache | None = None):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
         if max_batch < 1:
@@ -221,6 +286,33 @@ class ServingScheduler:
         self._virtual = (ex is not None
                          and getattr(ex.pool.clock, "virtual", False))
         self._base_delay = ex.pool.delay_model if ex is not None else None
+        # -- prefill efficiency (DESIGN.md §14).  packed=None means "pack
+        # when the architecture allows it" — auto-off for archs where
+        # padding leaks into the math (SSM state, MoE capacity, sliding
+        # window), so the grouped-by-length path stays their default.
+        if packed is None:
+            packed = engine.supports_packed
+        elif packed and not engine.supports_packed:
+            raise ValueError(
+                "packed=True needs a dense-attention engine (this "
+                "architecture integrates padding into its state); pass "
+                "packed=None to auto-select")
+        self.packed = bool(packed)
+        if chunk_tokens < 0:
+            raise ValueError(f"need chunk_tokens >= 0, got {chunk_tokens}")
+        if chunk_tokens or prefix_cache is not None:
+            if not engine.supports_packed:
+                raise ValueError(
+                    "chunked prefill / prefix caching need a dense-"
+                    "attention engine: chunk resume and KV restore assume "
+                    "attention state is exactly the KV slots")
+            if self.overlap:
+                raise ValueError(
+                    "chunk_tokens/prefix_cache schedule prefill streams "
+                    "on the serial step timeline; overlap=True is not "
+                    "supported with them")
+        self.chunk_tokens = int(chunk_tokens)
+        self.prefix_cache = prefix_cache
 
     # -- internals ---------------------------------------------------------
     def _timed_call(self, fn: Callable, *args) -> tuple:
@@ -276,6 +368,79 @@ class ServingScheduler:
         if ex is None:
             return 0, 0
         return ex.pool.dispatch_count, ex.run_count
+
+    def _cache_counters(self) -> tuple:
+        if self.prefix_cache is None:
+            return 0, 0
+        return (self.prefix_cache.stats.hit_tokens,
+                self.prefix_cache.stats.evictions)
+
+    # -- prefill streams (DESIGN.md §14) -----------------------------------
+    def _open_stream(self, r: Request, t_start: float,
+                     records: list) -> "_Stream | None":
+        """Decide how ``r`` prefills.  Returns a :class:`_Stream` when the
+        prompt resumes from a prefix-cache hit or is long enough to chunk;
+        None sends it down the cold packed path.  Lookup and KV restore
+        are master-local slicing — they advance no clock and dispatch
+        nothing (the whole point: skipped work, not protected work)."""
+        if self.prefix_cache is None and not self.chunk_tokens:
+            return None
+        hit, segs = 0, []
+        if self.prefix_cache is not None:
+            # prompt[:-1]: the last position is ALWAYS computed — its
+            # logits mint the first generated token (the vLLM rule)
+            hit, segs = self.prefix_cache.lookup(r.prompt[:-1])
+        if hit == 0 and not (self.chunk_tokens
+                             and len(r.prompt) > self.chunk_tokens):
+            return None
+        rec = RequestRecord(r.rid, len(r.prompt), r.max_new, r.arrival_s,
+                            admit_s=t_start)
+        records.append(rec)
+        cache = (self.engine.cache_from_prefix(segs, hit, self.max_seq)
+                 if hit else self.engine.new_stream_cache(self.max_seq))
+        return _Stream(req=r, rec=rec, cache=cache, pos=hit)
+
+    def _advance_streams(self, streams, lanes, new_caches, retired, t,
+                         completions) -> tuple:
+        """One chunk for every live stream.  A stream whose last chunk
+        lands gets its first token from that chunk's sample, inserts its
+        prompt's KV into the prefix cache, and joins the decode batch
+        (same step, like any cold admission)."""
+        still = []
+        n_chunks = 0
+        for s in streams:
+            rest = len(s.req.prompt) - s.pos
+            take = min(self.chunk_tokens, rest) if self.chunk_tokens else rest
+            chunk = np.asarray(s.req.prompt[s.pos:s.pos + take],
+                               np.int32)[None]
+            (tok, s.cache), dt = self._timed_call(
+                self.engine.prefill_chunk, s.cache, chunk)
+            t += dt
+            n_chunks += 1
+            s.pos += take
+            if s.pos < len(s.req.prompt):
+                still.append(s)
+                continue
+            self._insert_prefix(s.req.prompt, s.cache, 0)
+            s.rec.first_token_s = t
+            lane = _Lane(s.req, s.rec, [int(tok[0])])
+            if self._finished(lane):
+                self._retire(lane, t, completions)
+                retired += 1
+            else:
+                lanes.append(lane)
+                # cache_cat normalizes the stream's scalar pos to the (B,)
+                # lane vector the decode batch carries
+                new_caches.append(cache_cat([s.cache]))
+        return still, n_chunks, retired, t
+
+    def _insert_prefix(self, prompt, cache: dict, lane: int) -> None:
+        """Offer a finished prefill's KV to the prefix cache (whole blocks
+        only; already-cached blocks cost an LRU touch, not a copy)."""
+        if self.prefix_cache is None:
+            return
+        self.prefix_cache.insert(
+            prompt, lambda t0, t1: self.engine.kv_prefix(cache, lane, t0, t1))
 
     # -- the loop ----------------------------------------------------------
     def serve(self, requests: Sequence[Request]) -> ServeResult:
@@ -336,21 +501,24 @@ class ServingScheduler:
                     completions, step_reports) -> ServeResult:
         membership: list = []
         churn_idx = 0
+        streams: list[_Stream] = []
         ex = self.engine.executor
         with self.engine.executor_ctx():
-            while queue or lanes:
-                if not lanes and queue and queue[0].arrival_s > t:
+            while queue or lanes or streams:
+                if (not lanes and not streams and queue
+                        and queue[0].arrival_s > t):
                     t = queue[0].arrival_s  # idle system: jump to next arrival
                 t_start = t
                 self._arm_step(step)
                 step_reports.clear()
                 d0, r0 = self._counters()
+                hit0, ev0 = self._cache_counters()
                 # -- admission: arrived requests fill the free lanes ------
                 n_ready = 0
                 while (n_ready < len(queue)
                        and queue[n_ready].arrival_s <= t):
                     n_ready += 1
-                room = self.max_batch - len(lanes)
+                room = self.max_batch - len(lanes) - len(streams)
                 admit = self._admit_order(queue[:n_ready])[:max(room, 0)]
                 # remove by identity: dataclass equality would compare the
                 # ndarray prompt fields and raise on ambiguous truth value
@@ -361,22 +529,44 @@ class ServingScheduler:
                 #    applied at the step boundary while the pool is idle
                 churn_idx, joined, left = self._apply_membership(
                     churn_idx, t_start, qdepth, membership)
+                packed_tok = packed_pad = n_chunks = 0
                 if self.overlap and (admit or lanes):
                     (lanes, cache, retired, n_decoded, pf_d, pf_r,
                      i_pf, i_dec, t) = self._overlap_step(
                         lanes, cache, admit, t_start, records, completions,
                         step_reports)
                 else:
-                    # -- join-at-prefill (grouped by equal prompt length) -
+                    # -- classify the admission: prefix-cache hits and
+                    #    long prompts become chunk streams; the rest
+                    #    prefill cold this step (packed: ONE call)
                     new_caches = []
                     retired = 0
-                    for group in _length_groups(admit):
-                        prompts = np.stack([r.prompt for r in group])
-                        (first, gcache), dt = self._timed_call(
-                            self.engine.prefill_batch, prompts, self.max_seq)
+                    cold = []
+                    for r in admit:
+                        s = self._open_stream(r, t_start, records)
+                        (cold.append(r) if s is None
+                         else streams.append(s))
+                    # -- join-at-prefill for the cold admission ----------
+                    groups = ([cold] if self.packed and cold
+                              else _length_groups(cold))
+                    for group in groups:
+                        if self.packed:
+                            (first, gcache), dt = self._timed_call(
+                                self.engine.prefill_packed,
+                                [r.prompt for r in group], self.max_seq)
+                            tmax = max(len(r.prompt) for r in group)
+                            real = sum(len(r.prompt) for r in group)
+                            packed_tok += real
+                            packed_pad += len(group) * tmax - real
+                        else:
+                            prompts = np.stack([r.prompt for r in group])
+                            (first, gcache), dt = self._timed_call(
+                                self.engine.prefill_batch, prompts,
+                                self.max_seq)
                         t += dt
                         glanes = []
                         for j, r in enumerate(group):
+                            self._insert_prefix(r.prompt, gcache, j)
                             rec = RequestRecord(r.rid, len(r.prompt),
                                                 r.max_new, r.arrival_s,
                                                 admit_s=t_start,
@@ -396,6 +586,11 @@ class ServingScheduler:
                             new_caches.append(
                                 gcache if len(keep) == len(glanes)
                                 else cache_take(gcache, keep))
+                    # -- advance every prefill stream by one chunk -------
+                    if streams:
+                        (streams, n_chunks, retired, t) = self._advance_streams(
+                            streams, lanes, new_caches, retired, t,
+                            completions)
                     d_pf, r_pf = self._counters()
                     pf_d, pf_r = d_pf - d0, r_pf - r0
                     i_pf = (0, len(step_reports))
@@ -445,7 +640,13 @@ class ServingScheduler:
                            if ex is not None else 0),
                     joined=joined, left=left,
                     coded_n=self.engine.cfg.coded_n,
-                    coded_k=self.engine.cfg.coded_k))
+                    coded_k=self.engine.cfg.coded_k,
+                    packed_tokens=packed_tok, packed_pad_tokens=packed_pad,
+                    prefill_chunks=n_chunks,
+                    prefix_hit_tokens=self._cache_counters()[0] - hit0,
+                    cache_bytes=(self.prefix_cache.bytes
+                                 if self.prefix_cache is not None else 0),
+                    cache_evictions=self._cache_counters()[1] - ev0))
                 step += 1
         completions.sort(key=lambda c: c.rid)
         records.sort(key=lambda r: r.rid)
@@ -563,12 +764,18 @@ class ServingScheduler:
                 i_dec = (0, len(step_reports))
             d_mid, r_mid = self._counters()
             i_pf0 = len(step_reports)
-            for group in _length_groups(admit):
-                prompts = np.stack([r.prompt for r in group])
+            groups = ([admit] if self.packed and admit
+                      else _length_groups(admit))
+            for group in groups:
                 j0 = len(step_reports)
                 with ex.chain():
-                    first, gcache = self.engine.prefill_batch(prompts,
-                                                              self.max_seq)
+                    if self.packed:
+                        first, gcache = self.engine.prefill_packed(
+                            [r.prompt for r in group], self.max_seq)
+                    else:
+                        prompts = np.stack([r.prompt for r in group])
+                        first, gcache = self.engine.prefill_batch(
+                            prompts, self.max_seq)
                 n_calls += 1
                 end = max((r.t_complete for r in step_reports[j0:]),
                           default=0.0)

@@ -39,6 +39,7 @@ __all__ = [
     "BurstyArrivals",
     "TraceArrivals",
     "LengthDist",
+    "SharedPrefixDist",
     "Workload",
 ]
 
@@ -161,13 +162,71 @@ class LengthDist:
 
 
 @dataclasses.dataclass(frozen=True)
+class SharedPrefixDist:
+    """Prompt generator with *shared prefixes* — the workload shape prefix
+    caching exists for (system prompts, few-shot templates, multi-turn
+    histories).
+
+    ``n_families`` distinct prefix token strings of length ``prefix_len``
+    are derived from ``seed`` alone; each prompt picks a family by a Zipf
+    law over family rank (pmf ∝ (rank+1)^-``zipf_a``, explicitly
+    normalized — NOT numpy's unbounded ``rng.zipf`` — so the draw is a
+    plain seeded ``rng.choice`` and hit-rates are reproducible), then
+    appends a fresh random suffix whose length is drawn from
+    ``suffix_len``.  ``zipf_a=0`` degenerates to uniform family reuse;
+    larger ``zipf_a`` concentrates traffic on the hottest families, the
+    knob a cache-hit-rate sweep turns.
+    """
+
+    n_families: int
+    prefix_len: int
+    suffix_len: LengthDist
+    zipf_a: float = 1.0
+    vocab: int = 256
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.n_families < 1:
+            raise ValueError(f"need n_families >= 1, got {self.n_families}")
+        if self.prefix_len < 1:
+            raise ValueError(f"need prefix_len >= 1, got {self.prefix_len}")
+        if self.zipf_a < 0.0:
+            raise ValueError(f"need zipf_a >= 0, got {self.zipf_a}")
+
+    @property
+    def max_value(self) -> int:
+        """Longest prompt this distribution can emit (LengthDist duck)."""
+        return self.prefix_len + self.suffix_len.max_value
+
+    def _families(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        return rng.integers(0, self.vocab,
+                            size=(self.n_families, self.prefix_len),
+                            dtype=np.int64)
+
+    def _pmf(self) -> np.ndarray:
+        ranks = np.arange(1, self.n_families + 1, dtype=np.float64)
+        w = ranks ** -self.zipf_a
+        return w / w.sum()
+
+    def sample_prompt(self, rng: np.random.Generator) -> np.ndarray:
+        fam = int(rng.choice(self.n_families, p=self._pmf()))
+        suffix_n = self.suffix_len.sample(rng)
+        suffix = rng.integers(0, self.vocab, size=suffix_n, dtype=np.int64)
+        return np.concatenate([self._families()[fam], suffix])
+
+
+@dataclasses.dataclass(frozen=True)
 class Workload:
     """Arrival process x prompt/generation length distributions -> a
     reproducible open-loop request stream.
 
     ``generate(n)`` returns ``n`` :class:`Request` objects ordered by
     ``arrival_s``; prompt token ids are drawn uniformly from
-    ``[0, vocab)``.  Everything derives from ``seed`` alone.
+    ``[0, vocab)``, or — when ``shared_prefix`` is set — from a
+    :class:`SharedPrefixDist` (Zipf-reused prefix families + fresh
+    suffixes; ``prompt_len`` is then ignored).  Everything derives from
+    ``seed`` alone.
     """
 
     arrivals: ArrivalProcess
@@ -175,21 +234,31 @@ class Workload:
     max_new: LengthDist
     vocab: int = 256
     seed: int = 0
+    shared_prefix: SharedPrefixDist | None = None
 
     @property
     def max_seq(self) -> int:
         """Longest prompt + generation this workload can emit — what the
         scheduler's shared ring caches must be sized for."""
-        return self.prompt_len.max_value + self.max_new.max_value
+        prompt = (self.shared_prefix.max_value
+                  if self.shared_prefix is not None
+                  else self.prompt_len.max_value)
+        return prompt + self.max_new.max_value
 
     def generate(self, n: int) -> list[Request]:
         rng = np.random.default_rng(self.seed)
         times = self.arrivals.arrival_times(n, rng)
         out = []
         for rid in range(n):
-            T = self.prompt_len.sample(rng)
-            m = self.max_new.sample(rng)
-            prompt = rng.integers(0, self.vocab, size=T, dtype=np.int64)
+            if self.shared_prefix is not None:
+                m = self.max_new.sample(rng)
+                prompt = self.shared_prefix.sample_prompt(rng)
+            else:
+                # draw order (T, m, prompt) is pinned by seeded tests —
+                # keep it for the uniform path
+                T = self.prompt_len.sample(rng)
+                m = self.max_new.sample(rng)
+                prompt = rng.integers(0, self.vocab, size=T, dtype=np.int64)
             out.append(Request(rid=rid, prompt=prompt.astype(np.int32),
                                max_new=m, arrival_s=float(times[rid])))
         return out

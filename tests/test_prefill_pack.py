@@ -1,0 +1,392 @@
+"""Prefill packing, chunked prefill, and coded prefix caching (ISSUE 9).
+
+The load-bearing assertions:
+
+* **packing is exact and cheap**: a mixed-length admission prefilled in
+  ONE padded, masked call emits bitwise-identical tokens to the
+  grouped-by-length serial path — for every registered scheme, on the
+  session's dispatch backend — and its dispatch bill is one n-piece
+  dispatch per GEMM per *admission* (counter deltas), not per length;
+* **chunking is exact and interleaved**: a prompt prefilled chunk-by-chunk
+  across scheduler steps matches its one-shot prefill token-for-token,
+  while the running batch keeps decoding between chunks;
+* **prefix caching skips coded work**: a hot prefix restores KV with ZERO
+  pool dispatches (proved on ``WorkerPool.dispatch_count`` deltas), and a
+  warm cache survives ``retarget_coded``, scripted churn, and
+  ``autoscale_redundancy`` — cached KV is post-decode plaintext, so
+  coding-layer events invalidate nothing;
+* **the radix cache is deterministic**: block-granular matching, insert-
+  only-missing-blocks, LRU-by-bytes leaf-first eviction with creation-
+  order tie-breaks.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.schemes import scheme_names
+from repro.dist import (Autoscaler, ChurnEvent, ChurnSchedule, CodedExecutor,
+                        DeterministicDelay, FakeClock)
+from repro.models.model import ModelConfig
+from repro.serving import (Engine, PrefixCache, Request, ServingScheduler)
+from repro.serving.prefix_cache import PrefixCacheStats
+
+L = 2
+N = 4
+GEMMS = 2 * L           # ungated FFN: w_in + w_out per layer
+MAX_SEQ = 24
+# per-scheme k: free-k codes get 2-of-4; structural-k schemes derive their
+# own (replication floor(n/2), uncoded n)
+K = {"mds": 2, "lt": 2, "replication": 0, "uncoded": 0}
+
+
+def _cfg(scheme=None, coded=True, **over):
+    kw = dict(coded_n=N, coded_k=K.get(scheme, 2),
+              coded_scheme=scheme) if coded else {}
+    kw.update(over)
+    return ModelConfig(name="tiny", n_layers=L, d_model=32, n_heads=4,
+                       n_kv_heads=2, d_ff=64, vocab=64, gated=False,
+                       dtype=jnp.float32, **kw)
+
+
+def _mixed_reqs(lengths=(4, 7, 5, 4), max_new=3, arrivals=None):
+    out = []
+    for i, T in enumerate(lengths):
+        prompt = ((np.arange(T, dtype=np.int32) * 5 + 3 * i) % 64)
+        out.append(Request(i, prompt.astype(np.int32), max_new=max_new,
+                           arrival_s=0.0 if arrivals is None
+                           else arrivals[i]))
+    return out
+
+
+def _tokens(res):
+    return {c.rid: c.tokens.tolist() for c in res.completions}
+
+
+def _copy(reqs):
+    return [dataclasses.replace(r, prompt=r.prompt.copy()) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache: deterministic radix semantics (no engine involved — the
+# cache never interprets its stored pytrees)
+# ---------------------------------------------------------------------------
+
+class TestPrefixCacheUnit:
+    @staticmethod
+    def _seg(nbytes=64):
+        def fn(t0, t1):
+            return np.zeros(((t1 - t0), nbytes // (t1 - t0)), np.uint8)
+        return fn
+
+    def test_block_granularity(self):
+        pc = PrefixCache(block=4)
+        toks = list(range(10))
+        added = pc.insert(toks, self._seg())
+        assert added == 8          # 2 whole blocks; the 2-token tail is NOT stored
+        assert pc.n_blocks == 2
+        hit, segs = pc.lookup(toks)
+        assert hit == 8 and len(segs) == 2
+
+    def test_partial_tail_never_poisons_divergent_prompts(self):
+        pc = PrefixCache(block=4)
+        pc.insert([1, 2, 3, 4, 9, 9], self._seg())   # tail (9, 9) dropped
+        hit, _ = pc.lookup([1, 2, 3, 4, 7, 7, 7, 7])
+        assert hit == 4            # shared block matches; divergence is free
+
+    def test_segment_fn_called_only_for_missing_blocks(self):
+        pc = PrefixCache(block=4)
+        calls = []
+
+        def fn(t0, t1):
+            calls.append((t0, t1))
+            return np.zeros(4, np.uint8)
+
+        pc.insert(list(range(8)), fn)
+        assert calls == [(0, 4), (4, 8)]
+        calls.clear()
+        pc.insert(list(range(12)), fn)   # first 2 blocks resident
+        assert calls == [(8, 12)]
+        assert pc.insert(list(range(12)), fn) == 0  # pure LRU refresh
+        assert calls == [(8, 12)]
+
+    def test_trie_divergence(self):
+        pc = PrefixCache(block=2)
+        pc.insert([1, 2, 3, 4], self._seg())
+        pc.insert([1, 2, 8, 9], self._seg())
+        assert pc.n_blocks == 3    # shared root block + two divergent children
+        assert pc.lookup([1, 2, 3, 4])[0] == 4
+        assert pc.lookup([1, 2, 8, 9])[0] == 4
+        assert pc.lookup([1, 2, 5, 5])[0] == 2
+
+    def test_lru_by_bytes_evicts_leaf_first_deterministically(self):
+        # 3 independent 64-byte roots in a 160-byte cache: inserting the
+        # third overflows; the least-recently-USED (not -inserted) goes
+        pc = PrefixCache(capacity_bytes=160, block=2)
+        pc.insert([1, 1], self._seg(64))
+        pc.insert([2, 2], self._seg(64))
+        pc.lookup([1, 1])                      # touch A after B's insert
+        pc.insert([3, 3], self._seg(64))       # overflow -> evict B
+        assert pc.lookup([2, 2])[0] == 0
+        assert pc.lookup([1, 1])[0] == 2 and pc.lookup([3, 3])[0] == 2
+        assert pc.stats.evictions == 1 and pc.stats.evicted_tokens == 2
+        assert pc.bytes <= 160
+
+    def test_eviction_takes_leaves_before_parents(self):
+        pc = PrefixCache(capacity_bytes=128, block=2)
+        pc.insert([1, 1, 2, 2], self._seg(64))  # parent + child, 128 bytes
+        pc.insert([5, 5], self._seg(64))        # overflow by 64
+        # the chain's LEAF [1,1]->[2,2] is oldest-used; parent survives, so
+        # the tree never strands an unreachable interior node
+        assert pc.lookup([1, 1, 2, 2])[0] == 2
+        assert pc.lookup([5, 5])[0] == 2
+
+    def test_stats_and_clear(self):
+        pc = PrefixCache(block=4)
+        assert isinstance(pc.stats, PrefixCacheStats)
+        pc.lookup([1, 2, 3, 4])
+        pc.insert([1, 2, 3, 4], self._seg())
+        pc.lookup([1, 2, 3, 4])
+        assert pc.stats.lookups == 2
+        assert pc.stats.hits == 1 and pc.stats.misses == 1
+        assert pc.stats.hit_rate == 0.5
+        assert pc.stats.hit_tokens == 4 and pc.stats.inserted_tokens == 4
+        pc.clear()
+        assert pc.n_blocks == 0 and pc.bytes == 0
+        assert pc.lookup([1, 2, 3, 4])[0] == 0
+        assert pc.stats.lookups == 3   # history survives clear()
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="block"):
+            PrefixCache(block=0)
+        with pytest.raises(ValueError, match="capacity"):
+            PrefixCache(capacity_bytes=0)
+
+
+# ---------------------------------------------------------------------------
+# packing: one padded call == the grouped serial path, for every scheme,
+# on the session's backend
+# ---------------------------------------------------------------------------
+
+class TestPackedExactness:
+    @pytest.mark.parametrize("name", scheme_names())
+    def test_packed_matches_grouped_per_scheme(self, name, make_executor):
+        res = {}
+        for packed in (False, True):
+            ex = make_executor(N)
+            eng = Engine(_cfg(name), seed=0, executor=ex)
+            sched = ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                                     master_call_s=1e-3, packed=packed)
+            res[packed] = sched.serve(_copy(_mixed_reqs()))
+        assert _tokens(res[True]) == _tokens(res[False])
+
+    def test_packed_matches_grouped_eager(self):
+        # no executor: the jitted masked prefill against the jitted
+        # per-length prefill
+        toks = {}
+        for packed in (False, True):
+            eng = Engine(_cfg(coded=False), seed=0)
+            sched = ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                                     packed=packed)
+            toks[packed] = _tokens(sched.serve(_copy(_mixed_reqs())))
+        assert toks[True] == toks[False]
+
+    def test_one_admission_one_dispatch_per_gemm(self, make_executor):
+        # 3 distinct prompt lengths admitted together: packed runs GEMMS
+        # coded GEMMs total; the grouped path runs GEMMS per length.
+        runs = {}
+        for packed in (False, True):
+            ex = make_executor(N)
+            eng = Engine(_cfg("mds"), seed=0, executor=ex)
+            sched = ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                                     master_call_s=1e-3, packed=packed)
+            res = sched.serve(_copy(_mixed_reqs(lengths=(4, 7, 5))))
+            runs[packed] = res.steps[0].prefill_runs
+        assert runs[True] == GEMMS
+        assert runs[False] == 3 * GEMMS
+
+    def test_packed_pad_accounting(self, make_executor):
+        ex = make_executor(N)
+        eng = Engine(_cfg("mds"), seed=0, executor=ex)
+        sched = ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                                 master_call_s=1e-3)
+        res = sched.serve(_copy(_mixed_reqs(lengths=(4, 7, 5))))
+        s0 = res.steps[0]
+        assert s0.packed_tokens == 16          # 4 + 7 + 5 real tokens
+        assert s0.packed_pad_tokens == 3 * 7 - 16
+
+    def test_packed_true_rejected_for_stateful_arch(self):
+        # an SSM integrates padding into its state — packing would be wrong,
+        # so it is refused loudly and auto-off by default
+        cfg = ModelConfig(name="tiny-ssm", n_layers=1, d_model=32, n_heads=4,
+                          n_kv_heads=4, d_ff=64, vocab=64, gated=False,
+                          dtype=jnp.float32, block="mamba")
+        eng = Engine(cfg, seed=0)
+        assert not eng.supports_packed
+        with pytest.raises(ValueError, match="dense-attention"):
+            ServingScheduler(eng, max_seq=MAX_SEQ, packed=True)
+        sched = ServingScheduler(eng, max_seq=MAX_SEQ)  # auto-selects off
+        assert not sched.packed
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: exact, and genuinely interleaved with decode
+# ---------------------------------------------------------------------------
+
+class TestChunkedPrefill:
+    @pytest.mark.parametrize("name", scheme_names())
+    def test_chunked_matches_one_shot_per_scheme(self, name, make_executor):
+        reqs = _mixed_reqs(lengths=(12, 4), max_new=4)
+        toks = {}
+        for chunk in (0, 5):
+            ex = make_executor(N)
+            eng = Engine(_cfg(name), seed=0, executor=ex)
+            sched = ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                                     master_call_s=1e-3, chunk_tokens=chunk)
+            toks[chunk] = _tokens(sched.serve(_copy(reqs)))
+        assert toks[5] == toks[0]
+
+    def test_chunk_count_and_interleaving(self, make_executor):
+        # a 12-token prompt at chunk_tokens=4 takes ceil(12/4)=3 steps of
+        # prefill; a short prompt admitted alongside decodes DURING them
+        ex = make_executor(N)
+        eng = Engine(_cfg("mds"), seed=0, executor=ex)
+        sched = ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                                 master_call_s=1e-3, chunk_tokens=4)
+        res = sched.serve(_copy(_mixed_reqs(lengths=(12, 4), max_new=6)))
+        assert sum(s.prefill_chunks for s in res.steps) == math.ceil(12 / 4)
+        # interleaving: some step both advanced the stream AND decoded
+        assert any(s.prefill_chunks > 0 and s.batch > 0 for s in res.steps)
+        # the stream held a batch slot but decoded nothing until its last
+        # chunk: the long request's first token lands strictly after the
+        # short one's
+        recs = {r.rid: r for r in res.records}
+        assert recs[0].first_token_s > recs[1].first_token_s
+
+    def test_chunk_stream_bounds_step_occupancy(self, make_executor):
+        # every prefill-bearing step costs at most one chunk's GEMMs per
+        # stream — never the whole prompt's — so a long prompt cannot
+        # monopolize a step (the TPOT-flatness mechanism)
+        ex = make_executor(N)
+        eng = Engine(_cfg("mds"), seed=0, executor=ex)
+        sched = ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                                 master_call_s=1e-3, chunk_tokens=4)
+        res = sched.serve(_copy(_mixed_reqs(lengths=(12,), max_new=3)))
+        assert max(s.prefill_runs for s in res.steps) == GEMMS
+
+    def test_chunking_rejects_overlap_mode(self):
+        ex = CodedExecutor(N, clock=FakeClock(),
+                           delay_model=DeterministicDelay(1.0))
+        try:
+            eng = Engine(_cfg("mds"), seed=0, executor=ex)
+            with pytest.raises(ValueError, match="serial"):
+                ServingScheduler(eng, max_seq=MAX_SEQ, overlap=True,
+                                 chunk_tokens=4)
+        finally:
+            ex.close()
+
+
+# ---------------------------------------------------------------------------
+# prefix caching in the serving loop: hits skip coded work, warm caches
+# survive coding-layer events
+# ---------------------------------------------------------------------------
+
+# prompt length 9 == block 8 + 1: a replay's lookup on prompt[:-1] matches
+# the whole 8-token block and leaves a ONE-token suffix — below every
+# scheme's k, so a hot hit cannot reach the pool at all
+HOT_LEN = 9
+BLOCK = 8
+
+
+def _hot_reqs(n=3, max_new=3):
+    base = (np.arange(HOT_LEN, dtype=np.int32) * 7 + 1) % 64
+    return [Request(i, base.copy(), max_new=max_new, arrival_s=2.0 * i)
+            for i in range(n)]
+
+
+class TestPrefixCacheServing:
+    @pytest.mark.parametrize("name", scheme_names())
+    def test_cached_matches_cold_per_scheme(self, name, make_executor):
+        ex = make_executor(N)
+        eng = Engine(_cfg(name), seed=0, executor=ex)
+        cold = ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                                master_call_s=1e-3).serve(_copy(_hot_reqs()))
+        pc = PrefixCache(block=BLOCK)
+        warm = ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                                master_call_s=1e-3,
+                                prefix_cache=pc).serve(_copy(_hot_reqs()))
+        assert _tokens(warm) == _tokens(cold)
+        assert pc.stats.hits > 0
+
+    def test_hot_hit_issues_zero_pool_dispatches(self, make_executor):
+        ex = make_executor(N)
+        eng = Engine(_cfg("mds"), seed=0, executor=ex)
+        pc = PrefixCache(block=BLOCK)
+        mk = lambda: ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                                      master_call_s=1e-3, prefix_cache=pc)
+        first = mk().serve(_copy(_hot_reqs()))
+        # request 0 prefills cold and inserts; every later identical prompt
+        # hits the whole block and its 1-token suffix stays master-local
+        cold_steps = [s for s in first.steps if s.packed_tokens > 0]
+        assert len(cold_steps) == 1
+        assert sum(s.prefix_hit_tokens for s in first.steps) == 2 * BLOCK
+        for s in first.steps:
+            if s.prefix_hit_tokens and not s.packed_tokens:
+                assert s.prefill_dispatches == 0 and s.prefill_runs == 0
+        # a fully-warm replay issues ZERO prefill dispatches end to end
+        replay = mk().serve(_copy(_hot_reqs()))
+        assert sum(s.prefill_dispatches for s in replay.steps) == 0
+        assert sum(s.prefill_runs for s in replay.steps) == 0
+        assert _tokens(replay) == _tokens(first)
+
+    def test_warm_cache_survives_retarget_coded(self, make_executor):
+        ex = make_executor(N)
+        eng = Engine(_cfg("mds"), seed=0, executor=ex)
+        pc = PrefixCache(block=BLOCK)
+        mk = lambda: ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                                      master_call_s=1e-3, prefix_cache=pc)
+        first = mk().serve(_copy(_hot_reqs()))
+        eng.retarget_coded(N, 3)   # redundancy re-plan: mds(4,2) -> (4,3)
+        replay = mk().serve(_copy(_hot_reqs()))
+        # cached KV is post-decode plaintext — the re-plan invalidated
+        # nothing: full hits, zero prefill dispatches, identical tokens
+        assert sum(s.prefill_dispatches for s in replay.steps) == 0
+        assert _tokens(replay) == _tokens(first)
+
+    def test_warm_cache_survives_churn_and_redundancy_autoscale(self):
+        # elastic fleet + live (n, k) re-plans, threaded pool (churn needs
+        # one): warm-cache serving stays exact and dispatch-free
+        ex = CodedExecutor(N, clock=FakeClock(),
+                           delay_model=DeterministicDelay(1.0),
+                           timeout_s=30.0, elastic=True)
+        try:
+            eng = Engine(_cfg("mds"), seed=0, executor=ex)
+            pc = PrefixCache(block=BLOCK)
+            cold = ServingScheduler(
+                eng, max_seq=MAX_SEQ, max_batch=4, master_call_s=1e-3,
+                prefix_cache=pc).serve(_copy(_hot_reqs()))
+            churn = ChurnSchedule((ChurnEvent(2.0, "remove", 3),))
+            auto = Autoscaler(ex.pool, min_workers=3, max_workers=4,
+                              target_queue=100.0)
+            warm = ServingScheduler(
+                eng, max_seq=MAX_SEQ, max_batch=4, master_call_s=1e-3,
+                prefix_cache=pc, churn=churn, autoscaler=auto,
+                autoscale_redundancy=True).serve(_copy(_hot_reqs()))
+        finally:
+            ex.close()
+        assert warm.replans          # the fleet change DID re-plan (n, k)
+        assert sum(s.prefill_dispatches for s in warm.steps) == 0
+        assert _tokens(warm) == _tokens(cold)
+
+    def test_cache_telemetry_in_steps(self, make_executor):
+        ex = make_executor(N)
+        eng = Engine(_cfg("mds"), seed=0, executor=ex)
+        pc = PrefixCache(block=BLOCK)
+        res = ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                               master_call_s=1e-3,
+                               prefix_cache=pc).serve(_copy(_hot_reqs()))
+        assert res.steps[-1].cache_bytes == pc.bytes > 0
+        assert sum(s.prefix_hit_tokens for s in res.steps) \
+            == pc.stats.hit_tokens
