@@ -21,6 +21,7 @@ def main() -> None:
     from . import (
         adaptive_replan,
         elastic_churn,
+        explain_forensics,
         ext_hetero,
         fig4_overhead,
         fig5_scenario1,
@@ -53,6 +54,7 @@ def main() -> None:
         ("serving", serving_load.run),
         ("prefill", serving_load.run_prefill),
         ("elastic", elastic_churn.run),
+        ("explain", explain_forensics.run),
         ("mesh", mesh_dispatch.run),
         ("kernels", kernels_micro.run),
         ("roofline", roofline.run),

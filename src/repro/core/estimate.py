@@ -99,21 +99,32 @@ class WorkerProfile:
             raise ValueError(f"window must be >= 2, got {self.window}")
         if not 0.0 < self.alpha <= 1.0:
             raise ValueError(f"alpha must be in (0, 1], got {self.alpha}")
+        # (timestamp, per-unit value) pairs: timestamps let a detected
+        # regime shift discard the pre-shift prefix exactly (reset_at)
+        # instead of waiting a whole window for the EWMA to forget it
         self._samples = deque(maxlen=self.window)
 
     @property
     def ready(self) -> bool:
         return self.n_observed >= max(self.min_samples, 2)
 
-    def observe(self, duration: float, units: float = 1.0) -> None:
-        """Feed one duration observed at work content ``units``."""
+    def observe(self, duration: float, units: float = 1.0,
+                t: float | None = None) -> None:
+        """Feed one duration observed at work content ``units``.
+
+        ``t`` stamps the sample on the caller's timeline (virtual seconds
+        from the serving loop, arrival index otherwise); it defaults to
+        the observation count so ``reset_at`` is always meaningful.
+        """
         if not np.isfinite(duration) or duration < 0.0 or units <= 0.0:
             raise ValueError(f"bad observation ({duration}, {units})")
-        self._samples.append(duration / units)
+        if t is None:
+            t = float(self.n_observed)
+        self._samples.append((float(t), duration / units))
         self.n_observed += 1
         if len(self._samples) < 2:
             return
-        fit = fit_shift_exp(self._samples)
+        fit = fit_shift_exp(self.window_samples())
         if self.mu is None:
             self.mu, self.theta = fit.mu, fit.theta
         else:
@@ -122,6 +133,25 @@ class WorkerProfile:
             self.theta = (1 - self.alpha) * self.theta + self.alpha * fit.theta
             excess = ((1 - self.alpha) / self.mu + self.alpha / fit.mu)
             self.mu = 1.0 / excess
+
+    def reset_at(self, t: float) -> None:
+        """Drop every sample stamped before ``t`` and refit on what's left.
+
+        This is the regime-bleed fix (ISSUE 10): after a detected shift
+        the EWMA would otherwise keep blending pre-shift samples still in
+        the window, biasing the post-shift (mu, theta) for up to a full
+        window.  The refit is DIRECT (no EWMA history): the post-shift
+        regime's first fit should owe nothing to the old one.  With fewer
+        than 2 surviving samples the profile returns to cold start.
+        """
+        kept = [(ts, u) for ts, u in self._samples if ts >= t]
+        self._samples = deque(kept, maxlen=self.window)
+        self.n_observed = len(kept)
+        if len(kept) >= 2:
+            fit = fit_shift_exp([u for _, u in kept])
+            self.mu, self.theta = fit.mu, fit.theta
+        else:
+            self.mu = self.theta = None
 
     def fit(self) -> ShiftExp:
         if self.mu is None:
@@ -138,7 +168,7 @@ class WorkerProfile:
         return 1.0 / self.mean()
 
     def window_samples(self) -> list[float]:
-        return list(self._samples)
+        return [u for _, u in self._samples]
 
 
 class ProfileBank:
@@ -155,8 +185,15 @@ class ProfileBank:
                 self.window, self.alpha, min_samples=self.min_samples)
         return self.profiles[worker]
 
-    def observe(self, worker: int, duration: float, units: float = 1.0) -> None:
-        self.profile(worker).observe(duration, units)
+    def observe(self, worker: int, duration: float, units: float = 1.0,
+                t: float | None = None) -> None:
+        self.profile(worker).observe(duration, units, t=t)
+
+    def reset_at(self, t: float) -> None:
+        """Forward a detected regime shift to every profile (see
+        :meth:`WorkerProfile.reset_at`)."""
+        for p in self.profiles.values():
+            p.reset_at(t)
 
     def speeds(self, n_workers: int, default: float | None = None) -> list[float]:
         """Relative per-unit service rates for ``allocate_pieces``.

@@ -94,6 +94,12 @@ class LayerInfo:
     # the full output must materialize on the master, so no segment may
     # extend past it regardless of scheme
     barrier: bool = False
+    # observed per-unit compute slowdown of THIS layer relative to the
+    # params baseline (telemetry-driven re-planning, DESIGN.md §15): the
+    # cut DP charges this layer's flops at cmp_scale x, so a localized
+    # per-layer drift can move a segment boundary, not just k°.  1.0 =
+    # trust the baseline.
+    cmp_scale: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,30 +208,44 @@ def order_factor(scheme_name: str, n: int, k: int) -> float:
     return harmonic(n) - harmonic(n - k)
 
 
+def _scales(specs: Sequence[ConvSpec],
+            cmp_scales: Sequence[float] | None) -> Sequence[float]:
+    if cmp_scales is None:
+        return [1.0] * len(specs)
+    if len(cmp_scales) != len(specs):
+        raise ValueError(f"{len(cmp_scales)} cmp_scales for "
+                         f"{len(specs)} layers")
+    return [float(c) for c in cmp_scales]
+
+
 def segment_sizes(specs: Sequence[ConvSpec], pads: Sequence[int],
                   scheme: CodingScheme,
                   split: SegmentSplitPlan | None = None,
+                  cmp_scales: Sequence[float] | None = None,
                   ) -> tuple[PhaseSizes, float]:
     """Phase scalings of one segment execution (eqs. 8-12 over a chain).
 
     Sizes are evaluated at an *interior* partition (the widest chain —
     edge chains are narrower by their zero-injection counts).  Returns
     ``(sizes, remainder_flops)`` where the remainder is the master-local
-    chain for the W_O mod k columns (footnote 2).
+    chain for the W_O mod k columns (footnote 2).  ``cmp_scales`` charges
+    each layer's flops at its observed slowdown (telemetry re-planning).
     """
     k = scheme.k
     if split is None:
         split = plan_segment_split(specs, pads, k)
+    sc = _scales(specs, cmp_scales)
     part = split.parts[min(k // 2, k - 1)]
     s0, sd = specs[0], specs[-1]
     row_in = s0.batch * s0.c_in * s0.h_in * part.w_entry
     row_out = sd.batch * sd.c_out * sd.h_out * part.w_exit
-    n_cmp = sum(sp.subtask_flops(st.w_out)
-                for sp, st in zip(specs, part.steps))
+    n_cmp = sum(c * sp.subtask_flops(st.w_out)
+                for c, sp, st in zip(sc, specs, part.steps))
     rem = 0.0
     if split.remainder is not None:
-        rem = float(sum(sp.subtask_flops(st.w_out)
-                        for sp, st in zip(specs, split.remainder.steps)))
+        rem = float(sum(c * sp.subtask_flops(st.w_out)
+                        for c, sp, st in zip(sc, specs,
+                                             split.remainder.steps)))
     return PhaseSizes(
         n_enc=float(scheme.encode_flops(row_in)),
         n_cmp=float(n_cmp),
@@ -238,12 +258,14 @@ def segment_sizes(specs: Sequence[ConvSpec], pads: Sequence[int],
 def segment_layer_sizes(specs: Sequence[ConvSpec], pads: Sequence[int],
                         scheme: CodingScheme,
                         split: SegmentSplitPlan | None = None,
+                        cmp_scales: Sequence[float] | None = None,
                         ) -> Tuple[PhaseSizes, ...]:
     """Per-layer phase sizes of one segment piece chain: entry receive on
     the first layer, exit send on the last, compute per layer — the shape
     ``dist.SegmentDelay`` and the per-stage estimator consume."""
     if split is None:
         split = plan_segment_split(specs, pads, scheme.k)
+    sc = _scales(specs, cmp_scales)
     part = split.parts[min(scheme.k // 2, scheme.k - 1)]
     s0, sd = specs[0], specs[-1]
     row_in = s0.batch * s0.c_in * s0.h_in * part.w_entry
@@ -252,18 +274,19 @@ def segment_layer_sizes(specs: Sequence[ConvSpec], pads: Sequence[int],
     return tuple(
         PhaseSizes(
             n_enc=0.0,
-            n_cmp=float(sp.subtask_flops(st.w_out)),
+            n_cmp=float(c * sp.subtask_flops(st.w_out)),
             n_rec=4.0 * row_in if j == 0 else 0.0,
             n_sen=4.0 * row_out if j == last else 0.0,
             n_dec=0.0,
         )
-        for j, (sp, st) in enumerate(zip(specs, part.steps))
+        for j, (c, sp, st) in enumerate(zip(sc, specs, part.steps))
     )
 
 
 def segment_latency(specs: Sequence[ConvSpec], pads: Sequence[int],
                     scheme: CodingScheme, params: SystemParams,
-                    split: SegmentSplitPlan | None = None) -> float:
+                    split: SegmentSplitPlan | None = None,
+                    cmp_scales: Sequence[float] | None = None) -> float:
     """Approximate expected latency of one coded segment (eq. 16 extended).
 
     One encode + one decode on the master, then the k-th-arrival wait over
@@ -272,7 +295,7 @@ def segment_latency(specs: Sequence[ConvSpec], pads: Sequence[int],
     remainder chain — the segment-granularity analogue of
     ``planner.k_circ_remainder_aware``'s objective.
     """
-    s, rem = segment_sizes(specs, pads, scheme, split)
+    s, rem = segment_sizes(specs, pads, scheme, split, cmp_scales)
     enc_dec = (s.n_enc + s.n_dec) * (1.0 / params.mu_m + params.theta_m)
     theta_sum = (s.n_rec * params.theta_rec + s.n_cmp * params.theta_cmp
                  + s.n_sen * params.theta_sen)
@@ -288,6 +311,7 @@ def segment_latency(specs: Sequence[ConvSpec], pads: Sequence[int],
 def plan_stream_chunks(specs: Sequence[ConvSpec], pads: Sequence[int],
                        scheme: CodingScheme, params: SystemParams,
                        split: SegmentSplitPlan | None = None, *,
+                       cmp_scales: Sequence[float] | None = None,
                        tol: float = 0.1, cap: int = 8) -> int:
     """Streaming depth for one segment from the §IV transfer/compute ratio.
 
@@ -301,7 +325,7 @@ def plan_stream_chunks(specs: Sequence[ConvSpec], pads: Sequence[int],
     """
     if split is None:
         split = plan_segment_split(specs, pads, scheme.k)
-    layer_sz = segment_layer_sizes(specs, pads, scheme, split)
+    layer_sz = segment_layer_sizes(specs, pads, scheme, split, cmp_scales)
     stages: list[float] = []
     for s in layer_sz:
         if s.n_rec:
@@ -337,6 +361,7 @@ def _plan_segment(scheme_name: str, layers: Sequence[LayerInfo],
     no feasible k exists (e.g. a fixed k wider than the final output)."""
     specs = [li.spec for li in layers]
     pads = [li.pad for li in layers]
+    scales = [li.cmp_scale for li in layers]
     w_o = specs[-1].w_out
 
     def _try(k: int, scheme: CodingScheme | None = None):
@@ -347,7 +372,7 @@ def _plan_segment(scheme_name: str, layers: Sequence[LayerInfo],
         scheme = scheme if scheme is not None else _instantiate(
             scheme_name, n, k)
         return scheme, split, segment_latency(specs, pads, scheme, params,
-                                              split)
+                                              split, scales)
 
     if fixed_scheme is not None:
         # a pinned instance (legacy code= path): no k search, no registry
@@ -374,7 +399,7 @@ def _plan_segment(scheme_name: str, layers: Sequence[LayerInfo],
     if cls.scheme_name != "mds":
         scheme = _instantiate(scheme_name, n, best[0].k)
         return scheme, best[1], segment_latency(specs, pads, scheme, params,
-                                                best[1])
+                                                best[1], scales)
     return best
 
 
@@ -407,7 +432,9 @@ def _segment_step(layers: Sequence[LayerInfo], start: int, stop: int,
     scheme, split, lat = planned
     specs = [li.spec for li in layers[start:stop]]
     pads = [li.pad for li in layers[start:stop]]
-    chunks = plan_stream_chunks(specs, pads, scheme, params, split)
+    chunks = plan_stream_chunks(
+        specs, pads, scheme, params, split,
+        cmp_scales=[li.cmp_scale for li in layers[start:stop]])
     seg = layers[start:stop]
     s0, sd = seg[0].spec, seg[-1].spec
     # scatter = the n pieces the master actually dispatches: selection
@@ -438,7 +465,7 @@ def _segment_step(layers: Sequence[LayerInfo], start: int, stop: int,
 
 def _local_step(layers: Sequence[LayerInfo], start: int, stop: int,
                 params: SystemParams) -> LocalStep:
-    flops = sum(li.spec.subtask_flops(li.spec.w_out)
+    flops = sum(li.cmp_scale * li.spec.subtask_flops(li.spec.w_out)
                 for li in layers[start:stop])
     return LocalStep(start=start, stop=stop,
                      est_latency_s=flops * (params.theta_m + 1.0 / params.mu_m))

@@ -25,6 +25,7 @@ from .faults import (
     DelayModel,
     DeterministicDelay,
     FaultPlan,
+    LayerSlowdown,
     SegmentDelay,
     ShiftExpDelay,
     StragglerDrift,
@@ -65,6 +66,7 @@ __all__ = [
     "DelayModel",
     "DeterministicDelay",
     "FaultPlan",
+    "LayerSlowdown",
     "StragglerDrift",
     "ShiftExpDelay",
     "SegmentDelay",

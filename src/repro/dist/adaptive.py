@@ -46,6 +46,7 @@ import jax.numpy as jnp
 
 from ..core.estimate import (
     ProfileBank,
+    WorkerProfile,
     calibrated_params,
     round_trip_shift_excess,
 )
@@ -92,13 +93,20 @@ class AdaptivePlanner:
         self.prior = prior if prior is not None else SystemParams()
         self.bank = ProfileBank(window=window, alpha=alpha,
                                 min_samples=min_samples)
+        # per-LAYER profiles, pooled across workers (DESIGN.md §15): a
+        # localized per-layer slowdown moves one of these means off 1.0,
+        # which is what lets replan_segments re-cut segment boundaries
+        # instead of only recalibrating the fleet-uniform k°
+        self._layer_obs: dict[int, WorkerProfile] = {}
         self._alpha = alpha
         self._shift_frac: float | None = None  # EWMA prior shift fraction
         self._lock = threading.Lock()
 
     # -- telemetry ---------------------------------------------------------
     def observe_report(self, report: RunReport,
-                       sizes: PhaseSizes | Sequence[PhaseSizes]) -> None:
+                       sizes: PhaseSizes | Sequence[PhaseSizes], *,
+                       at: float | None = None,
+                       layer_ids: Sequence[int] | None = None) -> None:
         """Ingest one run's per-piece timings, normalized by the prior mean
         round-trip at the run's phase sizes (so profiles learned at one
         split price plans at another).
@@ -107,13 +115,24 @@ class AdaptivePlanner:
         multi-layer segment pieces (netplan, DESIGN.md §9): when a
         timing carries per-layer ``stages`` matching it, each stage feeds
         the profile as its own normalized sample — a depth-d segment
-        yields d estimator observations per piece instead of one."""
+        yields d estimator observations per piece instead of one.  Those
+        per-stage samples also feed per-LAYER profiles under the global
+        layer ids ``layer_ids`` (default: position in ``sizes``), the
+        evidence :meth:`replan_segments` re-cuts boundaries from.  ``at``
+        stamps the samples on the caller's timeline so a detected regime
+        shift can :meth:`reset_at` the pre-shift history away."""
         per_layer = None
         if not isinstance(sizes, PhaseSizes):
             per_layer = [round_trip_shift_excess(s, self.prior)
                          for s in sizes]
             shift = sum(s for s, _ in per_layer)
             excess = sum(e for _, e in per_layer)
+            if layer_ids is None:
+                layer_ids = range(len(per_layer))
+            layer_ids = [int(l) for l in layer_ids]
+            if len(layer_ids) != len(per_layer):
+                raise ValueError(f"{len(layer_ids)} layer_ids for "
+                                 f"{len(per_layer)} layers")
         else:
             shift, excess = round_trip_shift_excess(sizes, self.prior)
         unit = shift + excess
@@ -123,15 +142,51 @@ class AdaptivePlanner:
             for t in report.timings:
                 if (per_layer is not None and t.stages
                         and len(t.stages) == len(per_layer)):
-                    for dur, (s, e) in zip(t.stages, per_layer):
+                    for lid, dur, (s, e) in zip(layer_ids, t.stages,
+                                                per_layer):
                         if s + e > 0.0:
-                            self.bank.observe(t.worker, dur, units=s + e)
+                            self.bank.observe(t.worker, dur, units=s + e,
+                                              t=at)
+                            self._layer_profile(lid).observe(
+                                dur, units=s + e, t=at)
                 else:
-                    self.bank.observe(t.worker, t.t_compute, units=unit)
+                    self.bank.observe(t.worker, t.t_compute, units=unit,
+                                      t=at)
             rho = shift / unit
             self._shift_frac = (rho if self._shift_frac is None else
                                 (1 - self._alpha) * self._shift_frac
                                 + self._alpha * rho)
+
+    def _layer_profile(self, layer: int) -> WorkerProfile:
+        if layer not in self._layer_obs:
+            self._layer_obs[layer] = WorkerProfile(
+                self.bank.window, self.bank.alpha,
+                min_samples=self.bank.min_samples)
+        return self._layer_obs[layer]
+
+    def reset_at(self, t: float) -> None:
+        """Forward a detected regime shift: every per-worker and per-layer
+        profile drops its pre-``t`` samples and refits on the post-shift
+        window only — the regime-bleed fix (core/estimate.py), exposed
+        where the forensics loop (telemetry/explain.py) can pull it."""
+        with self._lock:
+            self.bank.reset_at(t)
+            for p in self._layer_obs.values():
+                p.reset_at(t)
+
+    def layer_scales(self, layer_ids: Sequence[int]) -> list[float]:
+        """Observed per-unit slowdown of each layer vs the prior (1.0 =
+        on-baseline or not enough evidence) — ``LayerInfo.cmp_scale``
+        currency.  Per-layer samples are normalized by the prior's mean,
+        so a healthy layer's profile mean sits at 1.0 and an Xx-slowed
+        layer's at ~X."""
+        with self._lock:
+            out = []
+            for lid in layer_ids:
+                p = self._layer_obs.get(int(lid))
+                out.append(float(p.mean())
+                           if p is not None and p.ready else 1.0)
+        return out
 
     @property
     def ready(self) -> bool:
@@ -183,6 +238,36 @@ class AdaptivePlanner:
         return AdaptivePlan(k=k, n_pieces=n_pieces, assignment=assignment,
                             params=params, from_telemetry=self.ready)
 
+    def replan_segments(self, layers: Sequence, n: int, *,
+                        scheme: str = "mds", **compile_kw):
+        """Re-run the netplan cut DP from live telemetry (DESIGN.md §15).
+
+        Uses the finest-grained evidence available.  With per-layer
+        profiles (stage telemetry from segment pieces), each layer's
+        ``cmp_scale`` is set to its observed absolute slowdown and the
+        stack is re-compiled on the PRIOR params — the drift is priced
+        exactly where it was measured, so a slowed layer can MOVE a
+        segment boundary (isolate itself into a shallow segment with its
+        own k°).  Re-compiling on ``params_hat`` instead would charge the
+        drift twice: the round-trip calibration smears the localized
+        slowdown fleet-wide (inflating master/encode/decode costs that
+        never drifted) AND the scales price it per-layer.  With no
+        per-layer evidence the plan falls back to the static compile on
+        calibrated ``params_hat`` — k°-only adaptation, the best a
+        round-trip-only view can do.  Returns the fresh
+        :class:`~repro.core.netplan.NetPlan`."""
+        from ..core.netplan import compile_plan
+
+        with self._lock:
+            fine = any(p.ready for p in self._layer_obs.values())
+        if not fine:
+            return compile_plan(tuple(layers), n, self.params_hat(),
+                                scheme, **compile_kw)
+        scales = self.layer_scales(range(len(layers)))
+        scaled = tuple(dataclasses.replace(li, cmp_scale=s)
+                       for li, s in zip(layers, scales))
+        return compile_plan(scaled, n, self.prior, scheme, **compile_kw)
+
 
 class AdaptiveExecutor(CodedExecutor):
     """A ``CodedExecutor`` that re-plans before each run and learns after.
@@ -209,15 +294,19 @@ class AdaptiveExecutor(CodedExecutor):
         self.last_was_probe = False
         self._runs = 0
         self._pending_sizes: PhaseSizes | None = None
+        self._pending_layer_ids: Sequence[int] | None = None
 
-    def arm_observation(self, sizes: PhaseSizes | Sequence[PhaseSizes]
-                        ) -> None:
+    def arm_observation(self, sizes: PhaseSizes | Sequence[PhaseSizes], *,
+                        layer_ids: Sequence[int] | None = None) -> None:
         """Declare the next run's work content so its report feeds the
         planner — callers that bypass :meth:`plan_matmul` (the conv path,
         benchmarks) arm this before invoking ``coded_conv2d`` /
         ``run_segment``.  A sequence of per-layer sizes declares a
-        multi-layer segment piece (per-stage telemetry)."""
+        multi-layer segment piece (per-stage telemetry); ``layer_ids``
+        names the GLOBAL layer each stage belongs to, so a mid-network
+        segment trains the right per-layer profiles."""
         self._pending_sizes = sizes
+        self._pending_layer_ids = layer_ids
 
     def ensure_armed(self, sizes) -> None:
         """As :meth:`arm_observation`, but defers to anything the caller
@@ -287,7 +376,9 @@ class AdaptiveExecutor(CodedExecutor):
         out = super().run(scheme, piece_fns, assignment=assignment,
                           speeds=speeds, gather_all=probe, **kw)
         observe = sizes if sizes is not None else self._pending_sizes
-        self._pending_sizes = None
+        lids = None if sizes is not None else self._pending_layer_ids
+        self._pending_sizes = self._pending_layer_ids = None
         if observe is not None and self.last_report is not None:
-            self.planner.observe_report(self.last_report, observe)
+            self.planner.observe_report(self.last_report, observe,
+                                        layer_ids=lids)
         return out

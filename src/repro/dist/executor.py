@@ -82,6 +82,16 @@ class ExecHandle:
         ex.run_count += 1
         if ex._chain_t is not None:
             ex._chain_t = max(ex._chain_t, report.t_complete)
+        if ex.trace_sink is not None:
+            from ..telemetry.trace import Span
+            origin = float(getattr(ex.trace_sink, "origin", 0.0))
+            ex.trace_sink.span(Span(
+                "run", "exec", origin + report.t_submit,
+                max(report.t_complete - report.t_submit, 0.0), "pool",
+                {"n": scheme.n, "k": scheme.k,
+                 "pieces": len(report.assignment),
+                 "redispatches": len(report.redispatched),
+                 "decoded": len(report.subset)}))
         if ex.on_report is not None:
             ex.on_report(report)
         subset = report.subset
@@ -134,6 +144,12 @@ class CodedExecutor:
         # serving scheduler hooks this to credit every run's (virtual)
         # completion time and dispatch cost to the step that issued it.
         self.on_report: Callable[[RunReport], None] | None = None
+        # optional telemetry.TraceSink: each booked run emits one "run"
+        # span covering submit -> accepting arrival (group-relative plus
+        # the sink's origin).  Run spans fire BEFORE on_report, so a
+        # scheduler hook that advances the sink's origin never displaces
+        # the run that produced the report.
+        self.trace_sink = None
         # virtual gate for the next chained run (None = chaining off)
         self._chain_t: float | None = None
 

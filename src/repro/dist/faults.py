@@ -42,6 +42,7 @@ __all__ = [
     "DeterministicDelay",
     "ShiftExpDelay",
     "SegmentDelay",
+    "LayerSlowdown",
     "per_layer_sizes",
 ]
 
@@ -279,6 +280,35 @@ class SegmentDelay:
         if self.chunks <= 1:
             return float(sum(subs))
         return float(pipelined_time(subs, self.chunks))
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSlowdown:
+    """Per-(worker, stage) multipliers over a staged delay model.
+
+    ``FaultPlan.straggler`` scales a worker's WHOLE round trip; the
+    forensics scenarios (DESIGN.md §15) need the orthogonal axis — one
+    *stage* of the chain slowing on one worker (a hot conv kernel, a
+    saturated link) while its other stages stay healthy.  ``factors``
+    maps worker -> {stage index -> multiplier}; unlisted coordinates keep
+    their base duration.  Wraps any delay model exposing ``stage_times``
+    (:class:`SegmentDelay`, :class:`ShiftExpDelay`); the wrapped piece
+    time is the serial stage sum, so the slowdown is visible in BOTH
+    ``PieceTiming.stages`` and the round trip — what lets the explainer
+    name the (worker, phase, layer) culprit exactly.
+    """
+
+    inner: DelayModel
+    factors: Mapping[int, Mapping[int, float]] = dataclasses.field(
+        default_factory=dict)
+
+    def stage_times(self, worker: int, piece: int) -> tuple:
+        base = self.inner.stage_times(worker, piece)
+        f = self.factors.get(worker, {})
+        return tuple(t * float(f.get(j, 1.0)) for j, t in enumerate(base))
+
+    def piece_time(self, worker: int, piece: int) -> float:
+        return float(sum(self.stage_times(worker, piece)))
 
 
 def per_layer_sizes(seg_sizes: Sequence[PhaseSizes]) -> tuple:

@@ -154,6 +154,10 @@ class MeshExecutor:
         self.run_count = 0
         self.last_report: RunReport | None = None
         self.on_report = None
+        # optional telemetry.TraceSink.  A shard_map program has no
+        # per-piece timeline — the mesh emits run-level spans ONLY (the
+        # honest degradation DESIGN.md §15 documents), on real wall time.
+        self.trace_sink = None
         self.compile_count = 0
         self._programs: dict = {}
         self._chain_t = 0.0
@@ -339,5 +343,13 @@ class MeshExecutor:
         self.pool.dispatch_count += n + sum(1 for p in dead if p in subset)
         self.run_count += 1
         self.last_report = report
+        if self.trace_sink is not None:
+            from ..telemetry.trace import Span
+            origin = float(getattr(self.trace_sink, "origin", 0.0))
+            self.trace_sink.span(Span(
+                "run", "exec", origin + self._chain_t, wall, "mesh",
+                {"n": n, "k": scheme.k, "pieces": len(report.assignment),
+                 "redispatches": len(report.redispatched),
+                 "decoded": len(report.subset)}))
         if self.on_report is not None:
             self.on_report(report)

@@ -285,6 +285,12 @@ class WorkerPool:
         # dispatch claim on real runs: B co-scheduled requests share one
         # n-piece dispatch, so a step costs n pieces, not B*n.
         self.dispatch_count = 0
+        # optional telemetry.TraceSink: when set, every resolved run emits
+        # one "piece" span per PieceTiming (plus per-stage "phase" spans
+        # when the stages sum fits inside the round trip — pipelined
+        # chunked stages overlap and have no serial placement).  Unset
+        # costs a single attribute load per run.
+        self.trace_sink = None
         # submission bookkeeping: _group numbers shared virtual timelines
         # (workers reset t_free when they first see a new group), _active
         # counts unresolved runs, _group_pin holds a group open across
@@ -747,6 +753,8 @@ class WorkerPool:
                     if self.clock.virtual and isinstance(self.clock,
                                                          FakeClock):
                         self.clock.advance(done)
+                    if self.trace_sink is not None:
+                        self._emit_spans(report)
                     return ({i: st.results[i] for i in report.subset},
                             report)
                 if not any(st.pending) and not st.heap:
@@ -773,6 +781,29 @@ class WorkerPool:
             with self._submit_lock:
                 self._active -= 1
                 self._live.pop(ctx.epoch, None)
+
+    def _emit_spans(self, report: "RunReport") -> None:
+        """Feed one resolved run's piece timings to the trace sink.
+
+        Times are group-relative; the sink's ``origin`` (0.0 when absent)
+        places them on the caller's timeline.  Stage phases are laid out
+        cumulatively from the dispatch instant, but only when the stage
+        sum fits inside the round trip — pipelined chunked stages overlap
+        in time and cannot honestly be placed end-to-end.
+        """
+        from ..telemetry.trace import Span
+        sink = self.trace_sink
+        origin = float(getattr(sink, "origin", 0.0))
+        for tm in report.timings:
+            tid = f"worker-{tm.worker}"
+            sink.span(Span("piece", "pool", origin + tm.t_dispatch,
+                           tm.t_compute, tid, {"piece": tm.piece}))
+            if tm.stages and sum(tm.stages) <= tm.t_compute * (1 + 1e-9) + 1e-12:
+                t = origin + tm.t_dispatch
+                for j, dur in enumerate(tm.stages):
+                    sink.span(Span("phase", "pool", t, dur, tid,
+                                   {"piece": tm.piece, "stage": j}))
+                    t += dur
 
     def _initial_assignment(self, n: int, counts,
                             cand: Sequence[int]) -> dict[int, int]:

@@ -33,7 +33,7 @@ import numpy as np
 
 from .scheduler import ServeResult
 
-__all__ = ["percentiles", "summarize", "epoch_summary"]
+__all__ = ["percentiles", "summarize", "slo_violations", "epoch_summary"]
 
 PCTS = (50.0, 95.0, 99.0)
 
@@ -106,6 +106,14 @@ def summarize(result: ServeResult, *, deadline_s: float | None = None,
         busy = [s for s in steps if s.batch > 0]
         out["dispatches_per_step_mean"] = (
             float(np.mean([s.dispatches for s in busy])) if busy else 0.0)
+        # -- per-step time-attribution percentiles (DESIGN.md §15): where
+        # a step's time went — pool makespan vs serial-equivalent
+        # occupancy vs streaming-hidden overlap vs master-side work —
+        # the distributions the tail-latency explainer starts from.
+        out["step_span_s"] = percentiles([s.span_s for s in steps])
+        out["step_busy_s"] = percentiles([s.busy_s for s in steps])
+        out["step_overlap_s"] = percentiles([s.overlap_s for s in steps])
+        out["step_master_s"] = percentiles([s.master_s for s in steps])
         # -- prefill-efficiency telemetry (DESIGN.md §14).  prefix_hit_rate
         # is token-weighted: skipped prefill positions over all prompt
         # tokens served — the fraction of prefill work the cache deleted.
@@ -140,6 +148,29 @@ def summarize(result: ServeResult, *, deadline_s: float | None = None,
         out["epochs"] = epoch_summary(result, deadline_s=deadline_s,
                                       epoch_s=epoch_s)
     return out
+
+
+def slo_violations(result: ServeResult, *,
+                   ttft_slo_s: float | None = None,
+                   tpot_slo_s: float | None = None) -> list[int]:
+    """Request ids that violated either SLO — the breach set the
+    tail-latency explainer (telemetry/explain.py) consumes.
+
+    A request violates when its TTFT exceeds ``ttft_slo_s`` or its TPOT
+    exceeds ``tpot_slo_s`` (omitted SLOs are not checked; at least one
+    must be given).  Returns sorted rids.
+    """
+    if ttft_slo_s is None and tpot_slo_s is None:
+        raise ValueError("pass ttft_slo_s and/or tpot_slo_s — with no SLO "
+                         "there is nothing to violate")
+    out = set()
+    for r in result.records:
+        if ttft_slo_s is not None and r.ttft_s > ttft_slo_s:
+            out.add(r.rid)
+        if (tpot_slo_s is not None and r.n_tokens > 1
+                and r.tpot_s > tpot_slo_s):
+            out.add(r.rid)
+    return sorted(out)
 
 
 def epoch_summary(result: ServeResult, *, deadline_s: float,

@@ -111,6 +111,12 @@ class StepRecord:
     runs: int           # executor runs issued during the step (counter delta)
     prefill_dispatches: int = 0  # of `dispatches`, issued by admission prefills
     prefill_runs: int = 0        # of `runs`, issued by admission prefills
+    # master-side seconds of the step's model calls (encode/decode/sampling
+    # — everything the pool never sees).  Closes the attribution gap for
+    # steps that issue ZERO pool runs (all-hot prefix-cache admission, B=1
+    # decode): they record span_s == 0 yet still spend real step time, and
+    # forensics must tell "pool was slow" from "master was slow".
+    master_s: float = 0.0
     # -- pool span telemetry (DESIGN.md §11): overlap measured, not asserted
     span_s: float = 0.0     # pool makespan of the step's runs (one group
     #                         timeline in overlap mode; == busy_s serial)
@@ -243,7 +249,8 @@ class ServingScheduler:
                  churn: "ChurnSchedule | None" = None,
                  autoscaler=None, autoscale_redundancy: bool = False,
                  packed: bool | None = None, chunk_tokens: int = 0,
-                 prefix_cache: PrefixCache | None = None):
+                 prefix_cache: PrefixCache | None = None,
+                 trace=None):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
         if max_batch < 1:
@@ -313,23 +320,52 @@ class ServingScheduler:
                     "supported with them")
         self.chunk_tokens = int(chunk_tokens)
         self.prefix_cache = prefix_cache
+        # optional telemetry.TraceSink (DESIGN.md §15): during serve() it
+        # is wired into the executor and pool, its ``origin`` is advanced
+        # along the serving timeline so piece/run spans place globally,
+        # and each step emits one "step" span — piece ⊂ run ⊂ step.
+        self.trace = trace
+        self._step_master_s = 0.0
 
     # -- internals ---------------------------------------------------------
-    def _timed_call(self, fn: Callable, *args) -> tuple:
+    def _timed_call(self, fn: Callable, *args, at: float | None = None
+                    ) -> tuple:
         """Run one model call; return (result, cost_s) on the scheduler's
         time plane.  Virtual cost = master_call_s + the (virtual)
         completion time of every pool run the call issued — a gather-all
         probe is honestly charged its LAST arrival, since that is what the
-        master waited for."""
+        master waited for.
+
+        ``at`` is the call's start on the serving timeline: with a trace
+        sink attached, the sink's ``origin`` is placed at ``at +
+        master_call_s`` and advanced past each run's accepting arrival, so
+        the call's (group-relative) piece/run spans land serially on the
+        global timeline — exactly mirroring how the virtual cost accrues.
+        Master-side time (wall when measured, ``master_call_s`` when
+        virtual) accrues into the step's ``master_s``."""
         ex = self.engine.executor
         if ex is None:
             w0 = time.perf_counter()
             out = fn(*args)
-            return out, time.perf_counter() - w0
+            wall = time.perf_counter() - w0
+            self._step_master_s += wall
+            return out, wall
         runs = []
         prev = ex.on_report
-        ex.on_report = (lambda r: (runs.append(r),
-                                   prev(r) if prev is not None else None))
+        sink = self.trace if self._virtual else None
+        if sink is not None and at is not None:
+            sink.origin = at + self.master_call_s
+
+        def hook(r):
+            runs.append(r)
+            # spans for this run were emitted BEFORE on_report fired, so
+            # advancing the origin here displaces only the runs after it
+            if sink is not None and r.arrivals:
+                sink.origin += max(a.t for a in r.arrivals)
+            if prev is not None:
+                prev(r)
+
+        ex.on_report = hook
         try:
             w0 = time.perf_counter()
             out = fn(*args)
@@ -337,7 +373,10 @@ class ServingScheduler:
         finally:
             ex.on_report = prev
         if not self._virtual:
+            self._step_master_s += max(
+                wall - sum(r.wall_s for r in runs), 0.0)
             return out, wall
+        self._step_master_s += self.master_call_s
         dt = self.master_call_s
         for r in runs:
             if r.arrivals:
@@ -414,7 +453,7 @@ class ServingScheduler:
             chunk = np.asarray(s.req.prompt[s.pos:s.pos + take],
                                np.int32)[None]
             (tok, s.cache), dt = self._timed_call(
-                self.engine.prefill_chunk, s.cache, chunk)
+                self.engine.prefill_chunk, s.cache, chunk, at=t)
             t += dt
             n_chunks += 1
             s.pos += take
@@ -486,6 +525,16 @@ class ServingScheduler:
         # _timed_call's temporary hook chains to it, so both modes feed it
         step_reports: list = []
         outer = ex.on_report if ex is not None else None
+        # wire the trace sink into the execution layers for the duration
+        # of this serve (save/restore: the executor may be shared across
+        # comparison arms).  The pool guard covers the mesh backend, whose
+        # fleet shim has no piece timeline to trace.
+        sink_prev: list = []
+        if ex is not None and self.trace is not None:
+            for obj in (ex, ex.pool):
+                if hasattr(obj, "trace_sink"):
+                    sink_prev.append((obj, obj.trace_sink))
+                    obj.trace_sink = self.trace
         if ex is not None:
             ex.on_report = (lambda r: (step_reports.append(r),
                                        outer(r) if outer is not None
@@ -496,6 +545,8 @@ class ServingScheduler:
         finally:
             if ex is not None:
                 ex.on_report = outer
+            for obj, prev in sink_prev:
+                obj.trace_sink = prev
 
     def _serve_loop(self, queue, lanes, cache, t, step, records, steps,
                     completions, step_reports) -> ServeResult:
@@ -511,6 +562,7 @@ class ServingScheduler:
                 t_start = t
                 self._arm_step(step)
                 step_reports.clear()
+                self._step_master_s = 0.0
                 d0, r0 = self._counters()
                 hit0, ev0 = self._cache_counters()
                 # -- admission: arrived requests fill the free lanes ------
@@ -553,7 +605,8 @@ class ServingScheduler:
                         if self.packed:
                             (first, gcache), dt = self._timed_call(
                                 self.engine.prefill_packed,
-                                [r.prompt for r in group], self.max_seq)
+                                [r.prompt for r in group], self.max_seq,
+                                at=t)
                             tmax = max(len(r.prompt) for r in group)
                             real = sum(len(r.prompt) for r in group)
                             packed_tok += real
@@ -562,7 +615,7 @@ class ServingScheduler:
                             prompts = np.stack([r.prompt for r in group])
                             (first, gcache), dt = self._timed_call(
                                 self.engine.prefill_batch, prompts,
-                                self.max_seq)
+                                self.max_seq, at=t)
                         t += dt
                         glanes = []
                         for j, r in enumerate(group):
@@ -603,7 +656,7 @@ class ServingScheduler:
                         last = np.asarray([ln.tokens[-1] for ln in lanes],
                                           np.int32)
                         (nxt, cache), dt = self._timed_call(
-                            self.engine.decode_batch, cache, last)
+                            self.engine.decode_batch, cache, last, at=t)
                         t += dt
                         for j, ln in enumerate(lanes):
                             ln.tokens.append(int(nxt[j]))
@@ -628,6 +681,7 @@ class ServingScheduler:
                     admitted=len(admit), retired=retired, queue_depth=qdepth,
                     dispatches=d1 - d0, runs=r1 - r0,
                     prefill_dispatches=pf_d, prefill_runs=pf_r,
+                    master_s=self._step_master_s,
                     span_s=span_s, busy_s=busy_s, serial_s=serial_s,
                     overlap_s=overlap_s,
                     prefill_span_s=self._pool_spans(
@@ -647,6 +701,15 @@ class ServingScheduler:
                     cache_bytes=(self.prefix_cache.bytes
                                  if self.prefix_cache is not None else 0),
                     cache_evictions=self._cache_counters()[1] - ev0))
+                if self.trace is not None:
+                    from ..telemetry.trace import Span
+                    self.trace.span(Span(
+                        "step", "serve", t_start, max(t - t_start, 0.0),
+                        "scheduler",
+                        {"step": step, "batch": n_decoded,
+                         "admitted": len(admit), "retired": retired,
+                         "dispatches": d1 - d0, "runs": r1 - r0,
+                         "master_s": self._step_master_s}))
                 step += 1
         completions.sort(key=lambda c: c.rid)
         records.sort(key=lambda r: r.rid)
@@ -754,6 +817,11 @@ class ServingScheduler:
         dec_out = None
         pf_out = []
         i_dec = (0, 0)
+        if self.trace is not None and self._virtual:
+            # one shared group timeline: runs carry group-relative
+            # t_submit/t_complete that already encode their ordering, so
+            # the origin pins once at the step start and never advances
+            self.trace.origin = t_start
         w0 = time.perf_counter()
         with ex.pool.group():
             if lanes:
@@ -787,8 +855,11 @@ class ServingScheduler:
         if self._virtual:
             t_done = max((r.t_complete for r in step_reports), default=0.0)
             t_end = t_start + n_calls * self.master_call_s + t_done
+            self._step_master_s += n_calls * self.master_call_s
         else:
             t_end = t_start + wall
+            self._step_master_s += max(
+                wall - sum(r.wall_s for r in step_reports), 0.0)
         # -- decode results: the token lands when the decode chain drains
         n_decoded = len(lanes)
         retired = 0

@@ -1,0 +1,18 @@
+"""Regenerate trace_pool.jsonl from tests/test_telemetry.py's scenario.
+
+Run from the repo root:  PYTHONPATH=src python tests/golden/make_trace_golden.py
+"""
+import pathlib
+import sys
+
+HERE = pathlib.Path(__file__).resolve().parent
+sys.path.insert(0, str(HERE.parent))
+
+from test_telemetry import _pool_trace  # noqa: E402
+
+from repro.telemetry import to_jsonl  # noqa: E402
+
+if __name__ == "__main__":
+    out = HERE / "trace_pool.jsonl"
+    out.write_text(to_jsonl(_pool_trace().spans))
+    print(f"wrote {out} ({len(out.read_text().splitlines())} spans)")

@@ -390,3 +390,33 @@ class TestPrefixCacheServing:
         assert res.steps[-1].cache_bytes == pc.bytes > 0
         assert sum(s.prefix_hit_tokens for s in res.steps) \
             == pc.stats.hit_tokens
+
+    def test_warm_replay_master_time_attributed(self):
+        # ISSUE 10 satellite: a fully-warm replay runs ENTIRELY master-
+        # local — hot-hit prefill plus B=1 decode (one token < every k)
+        # never reach the pool, so every step records span_s == 0 while
+        # the virtual clock still advances.  StepRecord.master_s is where
+        # that time now shows up.  Threads-pinned: the accounting is
+        # exact only on the virtual clock (mesh runs on wall time).
+        ex = CodedExecutor(N, clock=FakeClock(),
+                           delay_model=DeterministicDelay(1.0))
+        try:
+            eng = Engine(_cfg("mds"), seed=0, executor=ex)
+            pc = PrefixCache(block=BLOCK)
+            mk = lambda: ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                                          master_call_s=1e-3,
+                                          prefix_cache=pc)
+            mk().serve(_copy(_hot_reqs()))
+            replay = mk().serve(_copy(_hot_reqs()))
+        finally:
+            ex.close()
+        assert sum(s.runs for s in replay.steps) == 0
+        assert sum(s.prefill_dispatches for s in replay.steps) == 0
+        for s in replay.steps:
+            assert s.span_s == 0.0 and s.master_s > 0.0
+            # with zero pool time the step's whole extent IS master time
+            assert s.t_end - s.t_start == pytest.approx(s.master_s)
+        # a hot-hit step books TWO calls (master-local prefill + decode)
+        hot = [s for s in replay.steps if s.prefix_hit_tokens]
+        assert hot
+        assert all(s.master_s == pytest.approx(2e-3) for s in hot)

@@ -1,0 +1,506 @@
+"""Tail-latency forensics: trace export + SLO breach explanation (ISSUE 10).
+
+The load-bearing assertions:
+
+* **trace export is byte-stable**: a seeded FakeClock workload exports
+  byte-identical JSONL across two fresh runs, and the pool scenario pins
+  to a committed golden file;
+* **span nesting holds by construction**: in a serving trace every piece
+  span lies inside some run span and every run span inside some step span
+  — the scheduler's origin bookkeeping, not a post-hoc sort;
+* **tier-1 counters are derivable from the trace**: run-span args sum to
+  the pool's ``dispatch_count`` and the run-span count equals the
+  executor's ``run_count``;
+* **backend honesty**: threads and mesh emit the SAME number of run
+  spans for the same workload, and the mesh emits run-level spans ONLY
+  (a ``shard_map`` program has no per-piece timeline);
+* **the explainer names the scripted culprit**: a per-(worker, layer)
+  slowdown injected mid-trace is recovered as (worker, phase, layer)
+  with precision/recall >= 0.9, deterministically (same report bytes);
+* **regime bleed is fixed**: ``WorkerProfile.reset_at`` refits on the
+  post-shift window exactly, pinned against a direct ``fit_shift_exp``
+  on the post-shift samples.
+"""
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.coded_linear import coded_matmul
+from repro.core.estimate import ProfileBank, WorkerProfile, fit_shift_exp
+from repro.core.latency import PhaseSizes, SystemParams
+from repro.core.netplan import segment_latency, segment_sizes
+from repro.core.schemes import get_scheme
+from repro.core.splitting import ConvSpec
+from repro.dist import (AdaptivePlanner, CodedExecutor, DeterministicDelay,
+                        FakeClock, LayerSlowdown, SegmentDelay,
+                        per_layer_sizes)
+from repro.models.model import ModelConfig
+from repro.serving import Engine, Request, ServingScheduler, summarize
+from repro.serving.metrics import slo_violations
+from repro.telemetry import (BreachDataset, TraceRecorder, detect_regimes,
+                             explain_breaches, features_from_report,
+                             to_chrome_trace, to_jsonl)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "trace_pool.jsonl"
+
+# transfer-heavy params (cf. test_stream_exec.WIFI): stages comparable, so
+# per-stage telemetry has structure worth explaining
+WIFI = SystemParams(mu_m=2.5e9, theta_m=4e-10, mu_cmp=4e9, theta_cmp=1.35e-9,
+                    mu_rec=1.5e7, theta_rec=3e-7, mu_sen=1.5e7, theta_sen=3e-7)
+
+N, K = 4, 2
+PIECE = 0.01
+MASTER = 0.001
+MAX_SEQ = 16
+
+
+def _mds(n, k):
+    return get_scheme("mds").make(n, k)
+
+
+def _cfg(scheme="mds", k=K):
+    return ModelConfig(name="tiny", n_layers=2, d_model=32, n_heads=4,
+                       n_kv_heads=2, d_ff=64, vocab=64, gated=False,
+                       dtype=jnp.float32, coded_n=N, coded_k=k,
+                       coded_scheme=scheme)
+
+
+def _reqs(n, prompt_len=4, max_new=3):
+    return [Request(i, ((np.arange(prompt_len, dtype=np.int32) + 3 * i)
+                        % 64).astype(np.int32), max_new=max_new)
+            for i in range(n)]
+
+
+def _pool_trace():
+    """The golden scenario: one mds(4, 2) run on a staggered pool."""
+    rec = TraceRecorder()
+    with CodedExecutor(N, clock=FakeClock(),
+                       delay_model=DeterministicDelay(
+                           [0.01, 0.02, 0.03, 0.04])) as ex:
+        ex.trace_sink = rec
+        ex.pool.trace_sink = rec
+        ex.run(_mds(N, K), [lambda i=i: jnp.full((2, 2), float(i + 1))
+                            for i in range(N)])
+    return rec
+
+
+def _serve_trace():
+    """Deterministic serving trace + the tier-1 counters it must derive."""
+    rec = TraceRecorder()
+    with CodedExecutor(N, clock=FakeClock(),
+                       delay_model=DeterministicDelay(PIECE)) as ex:
+        eng = Engine(_cfg(), seed=0, executor=ex)
+        sched = ServingScheduler(eng, max_seq=MAX_SEQ, max_batch=4,
+                                 master_call_s=MASTER, trace=rec)
+        res = sched.serve(_reqs(3))
+        counters = (ex.pool.dispatch_count, ex.run_count)
+    return rec, res, counters
+
+
+# ---------------------------------------------------------------------------
+# export formats: golden JSONL, Chrome-trace schema, byte determinism
+# ---------------------------------------------------------------------------
+
+class TestTraceExport:
+    def test_jsonl_matches_golden(self):
+        # regenerate with: python tests/golden/make_trace_golden.py
+        assert to_jsonl(_pool_trace().spans) == GOLDEN.read_text()
+
+    def test_byte_identical_across_runs(self):
+        assert to_jsonl(_pool_trace().spans) == to_jsonl(_pool_trace().spans)
+
+    def test_serving_trace_byte_identical_across_runs(self):
+        a, _, _ = _serve_trace()
+        b, _, _ = _serve_trace()
+        assert to_jsonl(a.spans) == to_jsonl(b.spans)
+
+    def test_pool_spans_pinned(self):
+        rec = _pool_trace()
+        runs = rec.by_name("run")
+        assert len(runs) == 1
+        # k=2: the run completes at the 2nd-fastest worker's arrival
+        assert runs[0].t0 == 0.0 and runs[0].dur == pytest.approx(0.02)
+        assert runs[0].args["n"] == N and runs[0].args["k"] == K
+        pieces = rec.by_name("piece")
+        assert pieces and all(p.name == "piece" for p in pieces)
+        for p in pieces:
+            assert p.tid.startswith("worker-")
+            assert p.t0 >= 0.0 and p.dur > 0.0
+
+    def test_chrome_trace_schema(self):
+        rec, _, _ = _serve_trace()
+        doc = to_chrome_trace(rec.spans)
+        assert set(doc) == {"traceEvents", "displayTimeUnit"}
+        assert doc["displayTimeUnit"] == "ms"
+        events = doc["traceEvents"]
+        meta = [e for e in events if e["ph"] == "M"]
+        complete = [e for e in events if e["ph"] == "X"]
+        assert len(meta) + len(complete) == len(events)
+        # metadata first, one thread_name per track, tids 0..T-1
+        assert events[:len(meta)] == meta
+        assert all(e["name"] == "thread_name" for e in meta)
+        tids = {e["tid"] for e in meta}
+        assert tids == set(range(len(meta)))
+        names = {e["args"]["name"] for e in meta}
+        assert "scheduler" in names and "pool" in names
+        for e in complete:
+            assert set(e) == {"name", "cat", "ph", "ts", "dur", "pid",
+                              "tid", "args"}
+            assert e["tid"] in tids
+            assert e["ts"] >= 0.0 and e["dur"] >= 0.0
+        # microsecond timestamps of the raw spans, in emission order
+        assert [e["ts"] for e in complete] == [s.t0 * 1e6 for s in rec.spans]
+        json.dumps(doc)  # serializable as-is
+
+    def test_recorder_helpers(self):
+        rec = _pool_trace()
+        assert len(rec) == len(rec.spans) > 0
+        assert rec.by_name("nope") == []
+        rec.origin = 5.0
+        rec.clear()
+        assert len(rec) == 0 and rec.origin == 0.0
+
+
+# ---------------------------------------------------------------------------
+# serving traces: nesting invariant + counter derivability
+# ---------------------------------------------------------------------------
+
+def _within(inner, outers, eps=1e-9):
+    return any(o.t0 - eps <= inner.t0
+               and inner.t0 + inner.dur <= o.t0 + o.dur + eps
+               for o in outers)
+
+
+class TestServingTrace:
+    def test_nesting_piece_run_step(self):
+        rec, _, _ = _serve_trace()
+        steps = rec.by_name("step")
+        runs = rec.by_name("run")
+        pieces = rec.by_name("piece")
+        assert steps and runs and pieces
+        for r in runs:
+            assert _within(r, steps), r
+        for p in pieces:
+            assert _within(p, runs), p
+        for ph in rec.by_name("phase"):
+            assert _within(ph, runs), ph
+
+    def test_tier1_counters_derivable_from_trace(self):
+        rec, res, (dispatches, run_count) = _serve_trace()
+        runs = rec.by_name("run")
+        assert len(runs) == run_count
+        assert sum(r.args["pieces"] + r.args["redispatches"]
+                   for r in runs) == dispatches
+        steps = rec.by_name("step")
+        assert len(steps) == len(res.steps)
+        assert (sum(s.args["runs"] for s in steps)
+                == sum(s.runs for s in res.steps))
+        assert [s.args["master_s"] for s in steps] \
+            == [s.master_s for s in res.steps]
+
+    def test_step_spans_tile_the_serve_timeline(self):
+        rec, res, _ = _serve_trace()
+        steps = rec.by_name("step")
+        assert steps[0].t0 == 0.0
+        assert steps[-1].t0 + steps[-1].dur == pytest.approx(res.t_end)
+        for a, b in zip(steps, steps[1:]):
+            assert b.t0 == pytest.approx(a.t0 + a.dur)
+
+
+# ---------------------------------------------------------------------------
+# backend parity: same run-span counts, mesh is run-level only
+# ---------------------------------------------------------------------------
+
+class TestBackendParity:
+    RUNS = 3
+
+    def _trace_runs(self, make_executor):
+        rec = TraceRecorder()
+        ex = make_executor(5)
+        ex.trace_sink = rec
+        if hasattr(ex.pool, "trace_sink"):
+            ex.pool.trace_sink = rec
+        code = _mds(5, 3)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(13, 8)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+        for _ in range(self.RUNS):
+            coded_matmul(x, w, code, executor=ex)
+        return rec
+
+    def test_run_span_count_backend_invariant(self, make_executor):
+        # the SAME assertion under REPRO_BACKEND=threads and =mesh: run
+        # granularity survives the backend swap
+        rec = self._trace_runs(make_executor)
+        runs = rec.by_name("run")
+        assert len(runs) == self.RUNS
+        for r in runs:
+            assert r.args["n"] == 5 and r.args["k"] == 3
+            assert r.args["decoded"] >= 3
+
+    def test_mesh_is_run_level_only(self, make_executor, backend_name):
+        rec = self._trace_runs(make_executor)
+        pieces = rec.by_name("piece")
+        if backend_name == "mesh":
+            # honest degradation: a shard_map program has no per-piece
+            # timeline to report
+            assert pieces == [] and rec.by_name("phase") == []
+        else:
+            assert len(pieces) >= self.RUNS * 3  # >= k arrivals per run
+
+
+# ---------------------------------------------------------------------------
+# explanation: regime detection + culprit search on scripted slowdowns
+# ---------------------------------------------------------------------------
+
+def _lsz(n_layers=4):
+    return per_layer_sizes([PhaseSizes(n_enc=0.0, n_cmp=2e6, n_rec=1e4,
+                                       n_sen=1e4, n_dec=0.0)
+                            for _ in range(n_layers)])
+
+
+N_REQ, SHIFT, FACTOR = 30, 15, 12.0
+CULPRIT = (1, "cmp", 2)  # worker 1's layer-2 compute slows by FACTOR
+
+
+def _forensics_dataset():
+    """Scripted drift: healthy segment chains, then worker 1's layer-2
+    stage slows FACTOR x from request SHIFT on.  Returns (rows, breach,
+    times) — the explainer's input, built twice by the determinism test."""
+    lsz = _lsz()
+    rows, walls = [], []
+    with CodedExecutor(N, clock=FakeClock()) as ex:
+        for r in range(N_REQ):
+            delay = SegmentDelay(WIFI, lsz, seed=100 + r)
+            if r >= SHIFT:
+                delay = LayerSlowdown(delay, {CULPRIT[0]: {CULPRIT[2]:
+                                                           FACTOR}})
+            # uncoded k=n: completion waits on EVERY chain, so the slowed
+            # worker both lands in the timings and gates t_complete — the
+            # breach actually manifests
+            ex.run(get_scheme("uncoded").make(N),
+                   [lambda: jnp.ones((2, 2))] * N,
+                   delay_model=delay, gather_all=True)
+            rep = ex.last_report
+            rows.append(features_from_report(rep, per_layer=True))
+            walls.append(rep.t_complete - rep.t_submit)  # VIRTUAL span
+    slo = 1.05 * max(walls[:SHIFT])
+    return rows, [w > slo for w in walls], [float(r) for r in range(N_REQ)]
+
+
+@pytest.fixture(scope="module")
+def forensics():
+    return _forensics_dataset()
+
+
+class TestRegimeDetection:
+    def test_planted_mean_shift_found(self):
+        v = [1.0, 1.1, 0.9, 1.0, 1.05, 5.0, 5.2, 4.9, 5.1, 5.0]
+        sp = detect_regimes(v)
+        assert sp.split == 5
+        assert sp.lift == pytest.approx(5.0, rel=0.1)
+        assert sp.score > 1.0
+
+    def test_too_short_returns_none(self):
+        assert detect_regimes([1.0, 2.0, 3.0, 4.0, 5.0], min_seg=3) is None
+
+    def test_nan_keeps_original_indexing(self):
+        v = [np.nan, 1.0, 1.0, 1.0, np.nan, 5.0, 5.0, 5.0]
+        sp = detect_regimes(v, min_seg=3)
+        assert sp.split == 5  # index in the ORIGINAL series, not the
+        assert sp.mean_pre == pytest.approx(1.0)  # finite-compacted one
+
+    def test_flat_series_scores_zero(self):
+        sp = detect_regimes([2.0] * 12)
+        assert sp is not None and sp.score == 0.0
+
+
+class TestExplainer:
+    def test_recovers_scripted_culprit(self, forensics):
+        rows, breach, times = forensics
+        assert any(breach) and not all(breach)
+        rep = explain_breaches(rows, breach, times)
+        assert rep.method == "bnb"
+        assert rep.precision >= 0.9 and rep.recall >= 0.9
+        top = rep.culprits[0]
+        assert (top.worker, top.phase, top.layer) == CULPRIT
+        assert top.shift_at == pytest.approx(float(SHIFT), abs=1.0)
+        assert "worker 1" in rep.describe()
+
+    def test_report_bytes_deterministic(self, forensics):
+        rows, breach, times = forensics
+        a = explain_breaches(rows, breach, times).to_json()
+        rows2, breach2, times2 = _forensics_dataset()
+        b = explain_breaches(rows2, breach2, times2).to_json()
+        assert a == b
+        json.loads(a)  # valid JSON, not just stable bytes
+
+    def test_ga_agrees_with_bnb(self, forensics):
+        rows, breach, times = forensics
+        exact = explain_breaches(rows, breach, times)
+        ga = explain_breaches(rows, breach, times, max_exact=0, seed=0)
+        assert ga.method == "ga"
+        assert ga.f1 == pytest.approx(exact.f1)
+        assert {(c.worker, c.phase, c.layer) for c in ga.culprits} \
+            >= {(c.worker, c.phase, c.layer) for c in exact.culprits}
+
+    def test_no_breaches_no_culprits(self, forensics):
+        rows, _, times = forensics
+        rep = explain_breaches(rows, [False] * len(rows), times)
+        assert rep.method == "none" and rep.culprits == ()
+
+    def test_dataset_series_and_fires(self):
+        from repro.telemetry import FeatureKey
+        k = FeatureKey(0, "cmp", 0)
+        ds = BreachDataset([{k: 1.0}, {}, {k: 3.0}], [False, False, True])
+        s = ds.series(k)
+        assert s[0] == 1.0 and np.isnan(s[1]) and s[2] == 3.0
+        assert ds.fires(k, 2.0).tolist() == [False, False, True]
+        assert ds.distributions()[k].tolist() == [1.0, 3.0]
+
+
+# ---------------------------------------------------------------------------
+# regime bleed fix: reset_at refits on the post-shift window only
+# ---------------------------------------------------------------------------
+
+class TestEstimatorReset:
+    def _fed_profile(self):
+        rng = np.random.default_rng(0)
+        pre = 1.0 + rng.exponential(0.2, 40)
+        post = 5.0 + rng.exponential(0.2, 12)
+        prof = WorkerProfile(window=64, alpha=0.25, min_samples=2)
+        for i, u in enumerate(pre):
+            prof.observe(float(u), t=float(i))
+        for j, u in enumerate(post):
+            prof.observe(float(u), t=float(len(pre) + j))
+        return prof, post
+
+    def test_post_shift_fit_recovered_exactly(self):
+        prof, post = self._fed_profile()
+        # EWMA + window bleed: the blended fit still sits far below the
+        # post-shift regime (this is the bug the fix removes)
+        assert prof.fit().theta < 4.0
+        prof.reset_at(40.0)
+        clean = fit_shift_exp([float(u) for u in post])
+        assert prof.fit().mu == pytest.approx(clean.mu)
+        assert prof.fit().theta == pytest.approx(clean.theta)
+        assert prof.n_observed == len(post)
+
+    def test_reset_below_min_samples_goes_unready(self):
+        prof, post = self._fed_profile()
+        prof.reset_at(float(40 + len(post) - 1))  # keeps 1 sample
+        assert not prof.ready
+
+    def test_bank_forwards_to_all_profiles(self):
+        bank = ProfileBank(min_samples=2)
+        for w in (0, 1):
+            for i in range(6):
+                bank.observe(w, 1.0 + 0.1 * i, t=float(i))
+        bank.reset_at(4.0)
+        for w in (0, 1):
+            assert bank.profile(w).n_observed == 2
+
+    def test_planner_layer_scales_and_reset(self):
+        lsz = _lsz()
+        planner = AdaptivePlanner(WIFI, min_samples=4)
+        slow = LayerSlowdown(SegmentDelay(WIFI, lsz, seed=0),
+                             {w: {2: 8.0} for w in range(N)})
+        with CodedExecutor(N, clock=FakeClock()) as ex:
+            for r in range(10):
+                ex.run(_mds(N, 3), [lambda: jnp.ones((2, 2))] * N,
+                       delay_model=SegmentDelay(WIFI, lsz, seed=200 + r),
+                       gather_all=True)
+                planner.observe_report(ex.last_report, lsz, at=float(r))
+            for r in range(10, 22):
+                ex.run(_mds(N, 3), [lambda: jnp.ones((2, 2))] * N,
+                       delay_model=dataclasses.replace(
+                           slow, inner=SegmentDelay(WIFI, lsz, seed=200 + r)),
+                       gather_all=True)
+                planner.observe_report(ex.last_report, lsz, at=float(r))
+        blended = planner.layer_scales(range(4))[2]
+        planner.reset_at(10.0)
+        scales = planner.layer_scales(range(4))
+        # post-shift window only: the slowed layer reads ~8x, healthy ones
+        # ~1x, and the reset strictly sharpens the blended estimate
+        assert scales[2] > max(4.0, blended)
+        for j in (0, 1, 3):
+            assert 0.5 < scales[j] < 2.0
+
+
+# ---------------------------------------------------------------------------
+# re-planning currency: cmp_scale reaches the netplan cost model
+# ---------------------------------------------------------------------------
+
+class TestCmpScale:
+    def _chain(self, depth=3, size=18, c=8):
+        specs, pads, s = [], [], size
+        for j in range(depth):
+            specs.append(ConvSpec(c_in=3 if j == 0 else c, c_out=c,
+                                  h_in=s + 2, w_in=s + 2, kernel=3, stride=1))
+            pads.append(1)
+            s = specs[-1].w_out
+        return specs, pads
+
+    def test_segment_sizes_scales_compute_only(self):
+        specs, pads = self._chain()
+        code = _mds(4, 2)
+        s1, rem1 = segment_sizes(specs, pads, code)
+        s2, rem2 = segment_sizes(specs, pads, code, cmp_scales=[2.0] * 3)
+        assert s2.n_cmp == pytest.approx(2 * s1.n_cmp)
+        assert rem2 == pytest.approx(2 * rem1)
+        assert (s2.n_rec, s2.n_sen, s2.n_enc, s2.n_dec) \
+            == (s1.n_rec, s1.n_sen, s1.n_enc, s1.n_dec)
+
+    def test_segment_latency_monotone_in_layer_scale(self):
+        specs, pads = self._chain()
+        code = _mds(4, 2)
+        base = segment_latency(specs, pads, code, WIFI)
+        slowed = segment_latency(specs, pads, code, WIFI,
+                                 cmp_scales=[1.0, 8.0, 1.0])
+        assert slowed > base
+
+    def test_scale_length_validated(self):
+        specs, pads = self._chain()
+        with pytest.raises(ValueError):
+            segment_sizes(specs, pads, _mds(4, 2), cmp_scales=[1.0])
+
+
+# ---------------------------------------------------------------------------
+# step-time metrics + SLO violation extraction
+# ---------------------------------------------------------------------------
+
+class TestStepMetrics:
+    def test_step_time_percentiles_reported(self):
+        _, res, _ = _serve_trace()
+        out = summarize(res)
+        for key in ("step_span_s", "step_busy_s", "step_overlap_s",
+                    "step_master_s"):
+            assert set(out[key]) == {"p50", "p95", "p99"}
+        assert out["step_master_s"]["p50"] > 0.0
+        assert out["step_span_s"]["p99"] >= out["step_span_s"]["p50"] > 0.0
+
+    def test_master_s_attributed_per_step(self):
+        _, res, _ = _serve_trace()
+        for s in res.steps:
+            if s.batch > 0:
+                # every model call books MASTER on the virtual clock
+                assert s.master_s > 0.0
+                assert s.master_s == pytest.approx(
+                    MASTER * max(s.runs // (2 * 2), 1), rel=0.5)
+
+    def test_slo_violations_thresholds(self):
+        _, res, _ = _serve_trace()
+        rids = sorted(r.rid for r in res.records)
+        assert slo_violations(res, ttft_slo_s=-1.0) == rids
+        assert slo_violations(res, ttft_slo_s=1e9, tpot_slo_s=1e9) == []
+        ttfts = [r.ttft_s for r in res.records]
+        # tightening the SLO can only grow the violation set
+        assert set(slo_violations(res, ttft_slo_s=max(ttfts))) \
+            <= set(slo_violations(res, ttft_slo_s=min(ttfts) - 1e-9)) == \
+            set(rids)
+        with pytest.raises(ValueError):
+            slo_violations(res)
